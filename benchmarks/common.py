@@ -1,0 +1,25 @@
+"""Shared benchmark helpers: timing + the run.py CSV contract."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+
+def timed(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
+    """Median wall time (us) of fn() plus its last return value."""
+    ts, out = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2], out
+
+
+def emit(rows: Iterable[Row]) -> List[Row]:
+    rows = list(rows)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

@@ -1,0 +1,84 @@
+"""The paper's mechanisms as REAL collectives: wire bytes from compiled HLO.
+
+On this CPU container wall-clock timing of collectives is meaningless, so the
+benchmark reports the structural quantity that determines on-wire cost: the
+trip-aware per-device collective bytes of each strategy's compiled gradient
+sync for a fixed gradient pytree, on an 8-way DP mesh.  (Ring and
+rabenseifner should be ~2(W-1)/W x payload; butterfly log2(W) x payload; PS
+reduce-scatter+gather ~2x payload; int8 ring ~1/3.5 of fp32 ring.)
+
+Runs in a subprocess (needs 8 fake devices).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.api import GradSync, GradSyncConfig
+from repro.roofline.hlo_parse import collective_bytes_trip_aware
+
+mesh = jax.make_mesh((8,), ("data",))
+tree = {"a": jnp.zeros((1024, 256), jnp.float32), "b": jnp.zeros((512,), jnp.float32)}
+payload = sum(x.size * 4 for x in jax.tree.leaves(tree))
+results = {"payload": payload}
+for strategy, comp in [("psum", ""), ("ring", ""), ("ring+multicast", ""),
+                       ("butterfly", ""), ("rabenseifner", ""), ("ps", ""),
+                       ("ring", "int8"), ("ring", "topk")]:
+    sync = GradSync(GradSyncConfig(strategy=strategy, compression=comp,
+                                   average=False), tree)
+    res = sync.init_residuals()
+    def body(tr):
+        local = jax.tree.map(lambda x: x[0], tr)
+        if comp == "topk":
+            r = [jnp.zeros_like(x) for x in (res or [])]
+            out, _ = sync(local, {"data": 8}, r)
+        else:
+            out, _ = sync(local, {"data": 8})
+        return jax.tree.map(lambda x: x[None], out)
+    big = jax.tree.map(lambda x: jnp.zeros((8,) + x.shape, x.dtype), tree)
+    f = jax.jit(jax.shard_map(body, mesh=mesh,
+                              in_specs=(jax.tree.map(lambda _: P("data"), tree),),
+                              out_specs=jax.tree.map(lambda _: P("data"), tree),
+                              check_vma=False))
+    hlo = f.lower(big).compile().as_text()
+    coll = collective_bytes_trip_aware(hlo, 8)
+    results[f"{strategy}{'+' + comp if comp else ''}"] = coll.get("total", 0.0)
+print("JSON:" + json.dumps(results))
+"""
+
+
+def main():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, "-c", CODE], env=env,
+                       capture_output=True, text=True, timeout=900)
+    line = [l for l in p.stdout.splitlines() if l.startswith("JSON:")]
+    if not line:
+        print("jax_strategies bench failed:", p.stdout[-1500:], p.stderr[-1500:])
+        return emit([("jax_strategies/error", 0.0, "subprocess failed")])
+    results = json.loads(line[0][5:])
+    payload = results.pop("payload")
+    print(f"\n== Strategy wire bytes (8-way DP, payload {payload / 1e6:.2f} MB) ==")
+    rows = []
+    for k, v in results.items():
+        ratio = v / payload
+        print(f"  {k:18s} {v / 1e6:10.3f} MB/device   {ratio:5.2f}x payload")
+        rows.append((f"strategy_wire/{k}", 0.0, f"{ratio:.3f}x_payload"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Paper figures 3-12: bandwidth / worker / synthetic-model / compute sweeps."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.sim import INCEPTION_V3, PAPER_CNNS, RESNET_200, VGG16, simulate
+
+MECHS = ["multicast+agg", "ring", "butterfly"]
+PS_KW = dict(half_duplex_ps=True)
+
+
+def _kw(mech, **kw):
+    return {**kw, **(PS_KW if "agg" in mech or mech in ("baseline", "multicast")
+                     else {})}
+
+
+def fig3_5_bandwidth():
+    rows = []
+    print("\n== Figs 3-5: iteration time vs bandwidth (32 workers) ==")
+    for model in ("inception-v3", "resnet-200", "vgg16"):
+        tr = PAPER_CNNS[model]
+        for bw in (5e9, 10e9, 25e9, 50e9, 100e9):
+            vals = []
+            for mech in MECHS:
+                t = simulate(mech, tr, workers=32, bandwidth=bw,
+                             **( _kw(mech))).iteration_time
+                vals.append(t)
+                rows.append((f"fig3_5/{model}/{mech}/{bw / 1e9:.0f}g", 0.0,
+                             f"{t:.3f}s"))
+            print(f"  {model:14s} {bw / 1e9:5.0f} Gbps  " +
+                  "  ".join(f"{m}={v:7.3f}s" for m, v in zip(MECHS, vals)))
+    return rows
+
+
+def fig6_8_workers():
+    rows = []
+    print("\n== Figs 6-8: speedup vs worker count (25 Gbps) ==")
+    for model in ("inception-v3", "resnet-200", "vgg16"):
+        tr = PAPER_CNNS[model]
+        for w in (4, 8, 16, 32):
+            base = simulate("baseline", tr, workers=w, bandwidth=25e9,
+                            **PS_KW).iteration_time
+            vals = []
+            for mech in MECHS:
+                t = simulate(mech, tr, workers=w, bandwidth=25e9,
+                             **_kw(mech)).iteration_time
+                vals.append(base / t)
+                rows.append((f"fig6_8/{model}/{mech}/w{w}", 0.0,
+                             f"{base / t:.2f}x"))
+            print(f"  {model:14s} W={w:3d}  " +
+                  "  ".join(f"{m}={v:6.2f}x" for m, v in zip(MECHS, vals)))
+    return rows
+
+
+def fig9_10_synthetic():
+    rows = []
+    print("\n== Figs 9-10: synthetic future models (Inception-v3 + N modules) ==")
+    for kind in ("network", "compute"):
+        for n in (0, 25, 75, 125):
+            tr = INCEPTION_V3.with_synthetic_modules(kind, n) if n else INCEPTION_V3
+            base = simulate("baseline", tr, workers=32, bandwidth=25e9,
+                            **PS_KW).iteration_time
+            vals = []
+            for mech in ("agg", "multicast", "multicast+agg", "ring", "butterfly"):
+                t = simulate(mech, tr, workers=32, bandwidth=25e9,
+                             **_kw(mech)).iteration_time
+                vals.append((mech, base / t))
+                rows.append((f"fig9_10/{kind}/{mech}/n{n}", 0.0, f"{base / t:.2f}x"))
+            print(f"  {kind:8s} +{n:3d}  " +
+                  " ".join(f"{m}={v:5.2f}x" for m, v in vals))
+    return rows
+
+
+def fig11_12_compute():
+    rows = []
+    print("\n== Figs 11-12: faster accelerators (compute scaled 1-4x) ==")
+    for model in ("inception-v3", "resnet-200"):
+        for f in (1.0, 1.5, 2.0, 2.5, 3.0, 4.0):
+            tr = PAPER_CNNS[model].scaled(compute_factor=f)
+            base = simulate("baseline", tr, workers=32, bandwidth=25e9,
+                            **PS_KW).iteration_time
+            vals = []
+            for mech in MECHS:
+                t = simulate(mech, tr, workers=32, bandwidth=25e9,
+                             **_kw(mech)).iteration_time
+                vals.append(base / t)
+                rows.append((f"fig11_12/{model}/{mech}/x{f}", 0.0,
+                             f"{base / t:.2f}x"))
+            print(f"  {model:14s} x{f:<4}  " +
+                  "  ".join(f"{m}={v:6.2f}x" for m, v in zip(MECHS, vals)))
+    return rows
+
+
+def main():
+    rows = []
+    for fn in (fig3_5_bandwidth, fig6_8_workers, fig9_10_synthetic,
+               fig11_12_compute):
+        rows += fn()
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Roofline table from the dry-run artifacts (deliverable g, §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.environ.get("DRYRUN_DIR", "dryrun_results_v2")
+
+
+def load(mesh: str):
+    d = os.path.join(RESULTS, mesh)
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def main():
+    rows = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        cells = load(mesh)
+        if not cells:
+            continue
+        print(f"\n== Roofline: {mesh} ==")
+        print(f"  {'arch':24s}{'shape':12s}{'bound':11s}"
+              f"{'comp(ms)':>9s}{'mem(ms)':>9s}{'coll(ms)':>9s}"
+              f"{'MFU@bound':>10s}{'useful':>8s}")
+        for c in cells:
+            if c.get("skipped"):
+                print(f"  {c['arch']:24s}{c['shape']:12s}SKIP: {c['skipped'][:48]}")
+                rows.append((f"roofline/{mesh}/{c['arch']}/{c['shape']}", 0.0,
+                             "skipped"))
+                continue
+            r = c["roofline"]
+            print(f"  {c['arch']:24s}{c['shape']:12s}{r['bottleneck']:11s}"
+                  f"{r['compute_s'] * 1e3:9.2f}{r['memory_s'] * 1e3:9.2f}"
+                  f"{r['collective_s'] * 1e3:9.2f}"
+                  f"{r['mfu_at_bound']:10.4f}{r['useful_flops_ratio']:8.3f}")
+            rows.append((
+                f"roofline/{mesh}/{c['arch']}/{c['shape']}",
+                c.get("compile_s", 0) * 1e6,
+                f"bound={r['bottleneck']};mfu={r['mfu_at_bound']:.4f}",
+            ))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark entry point: one section per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV rows (and readable blocks).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import jax_strategies, kernels_bench, paper_figures, paper_tables
+    from benchmarks import roofline_report
+
+    print("name,us_per_call,derived")
+    sections = [
+        ("paper_tables", paper_tables.main),
+        ("paper_figures", paper_figures.main),
+        ("jax_strategies", jax_strategies.main),
+        ("kernels", kernels_bench.main),
+        ("roofline", roofline_report.main),
+    ]
+    for name, fn in sections:
+        t = time.time()
+        try:
+            fn()
+        except Exception as e:  # a missing artifact must not kill the harness
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", file=sys.stderr)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}")
+        print(f"# section {name} took {time.time() - t:.1f}s")
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Quickstart: train a tiny qwen-family LM on the synthetic pipeline (CPU).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.optim import OptConfig
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    tcfg = TrainConfig(
+        arch="qwen1.5-0.5b",
+        smoke=True,                       # reduced config: ~0.4M params
+        steps=60,
+        log_every=10,
+        batch_override=8,
+        seq_override=128,
+        opt=OptConfig(lr=2e-3, warmup_steps=10, total_steps=200),
+    )
+    trainer = Trainer(tcfg)
+    trainer.init_or_restore()
+    res = trainer.run()
+    print(f"\nloss {res['first_loss']:.3f} -> {res['last_loss']:.3f} "
+          f"in {res['steps']} steps ({res['median_step_s'] * 1e3:.0f} ms/step)")
+    assert res["last_loss"] < res["first_loss"]
+
+
+if __name__ == "__main__":
+    main()

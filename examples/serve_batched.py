@@ -1,0 +1,61 @@
+"""End-to-end driver: briefly train a small model, checkpoint it, then serve
+batched requests through the slot-based engine (prefill + decode with KV
+cache / SSM state).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.optim import OptConfig
+from repro.serving import Request, ServeConfig, ServingEngine
+from repro.train import TrainConfig, Trainer
+from repro.train import checkpoint as ckpt
+
+
+def main():
+    arch = "gemma2-2b"
+    with tempfile.TemporaryDirectory() as d:
+        # 1) train briefly so served logits are not random noise
+        tcfg = TrainConfig(
+            arch=arch, smoke=True, steps=30, log_every=10,
+            batch_override=8, seq_override=128, ckpt_dir=d,
+            opt=OptConfig(lr=2e-3, warmup_steps=5, total_steps=100),
+        )
+        tr = Trainer(tcfg)
+        tr.init_or_restore()
+        tr.run()
+        tr.save()
+
+        # 2) restore into a serving engine
+        cfg = reduced(get_config(arch))
+        like = init_params(jax.random.PRNGKey(0), cfg)
+        step = ckpt.latest_step(d + "/params")
+        params = ckpt.restore_checkpoint(d + "/params", step, like)
+        eng = ServingEngine(cfg, params, ServeConfig(slots=4, max_len=256,
+                                                     temperature=0.0))
+
+        # 3) serve a batched workload
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(prompt=list(rng.integers(1, 400, size=rng.integers(4, 16))),
+                    max_new=24)
+            for _ in range(10)
+        ]
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in reqs)
+        print(f"\nserved {len(reqs)} requests / {toks} tokens in {dt:.2f}s "
+              f"({toks / dt:.1f} tok/s on CPU)")
+        print("sample:", reqs[0].out[:12])
+        assert all(r.done and len(r.out) == 24 for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Architecture registry: ``--arch <id>`` resolution + the 40-cell matrix."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    Cell,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    SMOKE_DECODE_SHAPE,
+    SMOKE_SHAPE,
+    reduced,
+)
+
+from repro.configs.qwen1_5_0_5b import CONFIG as _qwen
+from repro.configs.starcoder2_3b import CONFIG as _starcoder2
+from repro.configs.gemma2_2b import CONFIG as _gemma2
+from repro.configs.llama3_405b import CONFIG as _llama3
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.chameleon_34b import CONFIG as _chameleon
+from repro.configs.jamba_v0_1_52b import CONFIG as _jamba
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        _qwen,
+        _starcoder2,
+        _gemma2,
+        _llama3,
+        _seamless,
+        _falcon_mamba,
+        _moonshot,
+        _mixtral,
+        _chameleon,
+        _jamba,
+    )
+}
+
+# Archs whose long-context story is sub-quadratic (SSM / hybrid / SWA rolling
+# cache).  All others skip ``long_500k`` per the assignment and DESIGN.md §4.
+LONG_CONTEXT_ARCHS = frozenset(
+    {"falcon-mamba-7b", "jamba-v0.1-52b", "mixtral-8x7b"}
+)
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ARCHS)}"
+        ) from None
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_runnable(arch: str, shape: str) -> Cell:
+    """Classify one cell of the 40-cell matrix."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return Cell(
+            arch,
+            shape,
+            runnable=False,
+            skip_reason="pure full-attention arch; 500k decode needs "
+            "sub-quadratic attention (DESIGN.md section 4)",
+        )
+    return Cell(arch, shape, runnable=True)
+
+
+def all_cells() -> List[Cell]:
+    return [cell_runnable(a, s.name) for a in sorted(ARCHS) for s in ALL_SHAPES]
+
+
+__all__ = [
+    "ARCHS",
+    "ALL_SHAPES",
+    "Cell",
+    "LONG_CONTEXT_ARCHS",
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "SMOKE_DECODE_SHAPE",
+    "SMOKE_SHAPE",
+    "all_cells",
+    "cell_runnable",
+    "get_config",
+    "get_shape",
+    "reduced",
+]

@@ -1,0 +1,241 @@
+"""Config dataclasses for architectures, shapes and (arch x shape) cells.
+
+Every assigned architecture is expressed as a ``ModelConfig``; every assigned
+input shape as a ``ShapeConfig``.  A ``Cell`` is one (arch x shape) pair of the
+40-cell dry-run matrix.  Configs are plain frozen dataclasses so they can be
+hashed, printed, and serialized into checkpoints / experiment logs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    num_experts_per_tok: int
+    d_ff_expert: int                  # per-expert hidden width
+    layer_period: int = 1             # every `period`-th layer is MoE
+    layer_offset: int = 0
+    num_shared_experts: int = 0       # always-on experts (DeepSeek/Moonlight style)
+    router_jitter: float = 0.0
+    aux_loss_coef: float = 0.01
+    capacity_factor: float = 1.25     # <=0 means "no token dropping"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_size: int = 16              # N in Mamba-1
+    conv_width: int = 4
+    expand: int = 2                   # d_inner = expand * d_model
+    dt_rank: int = 0                  # 0 => ceil(d_model / 16)
+
+    def resolved_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank if self.dt_rank > 0 else max(1, -(-d_model // 16))
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture.  Fields cover the union of the 10 assigned families."""
+
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                    # 0 for attention-free archs
+    num_kv_heads: int
+    d_ff: int                         # dense-MLP hidden width (0 if pure-MoE/SSM)
+    vocab_size: int
+
+    head_dim: int = 0                 # 0 => d_model // num_heads
+    # --- attention features -------------------------------------------------
+    qkv_bias: bool = False
+    qk_norm: bool = False             # chameleon
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0           # 0 => full attention
+    local_global_period: int = 0      # gemma2: 2 => alternate local/global
+    attn_logit_softcap: float = 0.0   # 0 => disabled
+    final_logit_softcap: float = 0.0
+    # --- MLP ----------------------------------------------------------------
+    mlp_glu: bool = True              # gated (SwiGLU/GeGLU) vs plain 2-matmul MLP
+    activation: str = "silu"          # silu | gelu
+    # --- mixture of experts ---------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    # --- state space --------------------------------------------------------
+    ssm: Optional[SSMConfig] = None
+    attn_layer_period: int = 0        # hybrid: 1 attention layer per N (jamba: 8)
+    attn_layer_offset: int = 0
+    # --- encoder/decoder ------------------------------------------------------
+    encoder_layers: int = 0           # >0 => encoder-decoder
+    # --- embeddings / norms ---------------------------------------------------
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False    # gemma: * sqrt(d_model)
+    post_block_norm: bool = False     # gemma2 uses pre+post norms
+    norm_eps: float = 1e-6
+    # --- modality frontend (stubbed per instructions) -------------------------
+    frontend: str = ""                # "" | "audio" | "vision-vq"
+    # --- numerics -------------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def attn_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def is_attn_layer(self, i: int) -> bool:
+        """Hybrid interleave: which layer indices carry attention."""
+        if self.attention_free:
+            return False
+        if self.attn_layer_period <= 0:
+            return True
+        return (i % self.attn_layer_period) == self.attn_layer_offset
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        return (i % self.moe.layer_period) == self.moe.layer_offset
+
+    def is_local_layer(self, i: int) -> bool:
+        """gemma2-style local/global alternation; local layers use the window."""
+        if self.local_global_period <= 0:
+            return self.sliding_window > 0
+        return (i % self.local_global_period) == 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        total = v * d                                    # embedding
+        if not self.tie_embeddings:
+            total += v * d                               # lm head
+        enc_total = self.encoder_layers
+        for i in range(self.num_layers + enc_total):
+            is_enc = i >= self.num_layers
+            li = i if not is_enc else i - self.num_layers
+            # attention
+            if self.is_attn_layer(li) or is_enc:
+                q = d * self.num_heads * hd
+                kv = 2 * d * self.num_kv_heads * hd
+                o = self.num_heads * hd * d
+                total += q + kv + o
+                if self.qkv_bias:
+                    total += (self.num_heads + 2 * self.num_kv_heads) * hd
+                if is_enc is False and self.is_encoder_decoder:
+                    total += q + kv + o                  # cross attention
+            elif self.ssm is not None:                   # mamba block
+                di = self.ssm.expand * d
+                dt = self.ssm.resolved_dt_rank(d)
+                n = self.ssm.state_size
+                total += d * 2 * di                      # in_proj
+                total += di * self.ssm.conv_width + di   # conv1d
+                total += di * (dt + 2 * n)               # x_proj
+                total += dt * di + di                    # dt_proj
+                total += di * n + di                     # A_log, D
+                total += di * d                          # out_proj
+            # mlp / moe
+            if self.is_moe_layer(li) and not is_enc:
+                m = self.moe
+                mult = 3 if self.mlp_glu else 2
+                total += m.num_experts * mult * d * m.d_ff_expert
+                total += d * m.num_experts               # router
+                total += m.num_shared_experts * mult * d * m.d_ff_expert
+            elif self.d_ff > 0:
+                mult = 3 if self.mlp_glu else 2
+                total += mult * d * self.d_ff
+            # norms (negligible, included for completeness)
+            total += 2 * d
+        total += d                                       # final norm
+        return total
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape."""
+
+    name: str                          # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                          # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One (architecture x shape) pair of the dry-run matrix."""
+
+    arch: str
+    shape: str
+    runnable: bool = True              # False => documented skip (long_500k on full-attn)
+    skip_reason: str = ""
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests.
+
+    Preserves the structural features (GQA, MoE, SSM interleave, enc-dec,
+    local/global alternation, softcaps) while shrinking every dimension.
+    """
+    changes = dict(
+        d_model=128,
+        num_heads=4 if cfg.num_heads else 0,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_heads else 0,
+        head_dim=32 if cfg.num_heads else 0,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        sliding_window=64 if cfg.sliding_window else 0,
+        name=cfg.name + "-smoke",
+    )
+    # keep one full interleave block, but no more
+    if cfg.attn_layer_period > 0:
+        changes["attn_layer_period"] = 4
+        changes["attn_layer_offset"] = min(cfg.attn_layer_offset, 3)
+        changes["num_layers"] = 4
+    elif cfg.local_global_period > 0:
+        changes["num_layers"] = 4
+    else:
+        changes["num_layers"] = 2
+    if cfg.encoder_layers:
+        changes["encoder_layers"] = 2
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=4,
+            num_experts_per_tok=min(cfg.moe.num_experts_per_tok, 2),
+            d_ff_expert=64,
+        )
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, state_size=8, dt_rank=8)
+    changes.update(overrides)
+    return dataclasses.replace(cfg, **changes)
+
+
+SMOKE_SHAPE = ShapeConfig("smoke", 64, 2, "train")
+SMOKE_DECODE_SHAPE = ShapeConfig("smoke_decode", 128, 2, "decode")

@@ -1,0 +1,24 @@
+"""chameleon-34b — early-fusion VLM decoder. [arXiv:2405.09818; unverified]
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536 (text + VQ image
+tokens in one vocabulary).  QK-norm as in the paper.  Early fusion means the
+modality frontend is the VQ-VAE tokenizer, which is a STUB here — inputs are
+already token ids drawn from the unified vocab.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22_016,
+    vocab_size=65_536,
+    qk_norm=True,
+    rope_theta=10_000.0,
+    mlp_glu=True,
+    activation="silu",
+    frontend="vision-vq",
+)

@@ -1,0 +1,20 @@
+"""falcon-mamba-7b — attention-free Mamba-1 LM. [arXiv:2410.05355; unverified]
+
+64L d_model=4096, ssm_state=16, conv=4, expand=2 (d_inner=8192),
+dt_rank=256, vocab=65024.  No KV cache: decode state is O(d_inner * N) per
+layer, so ``long_500k`` runs natively.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    num_layers=64,
+    d_model=4096,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=65_024,
+    ssm=SSMConfig(state_size=16, conv_width=4, expand=2, dt_rank=256),
+    tie_embeddings=True,
+)

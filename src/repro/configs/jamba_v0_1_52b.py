@@ -1,0 +1,31 @@
+"""jamba-v0.1-52b — hybrid Mamba + attention + MoE. [arXiv:2403.19887; hf]
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536.  Attention:Mamba
+interleave 1:7 (one attention layer per 8, at offset 4), MoE 16 experts top-2
+on every other layer (offset 1).  Hybrid => ``long_500k`` runs (attention
+layers are 4/32; decode state dominated by Mamba states + 4 KV caches).
+"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=65_536,
+    moe=MoEConfig(
+        num_experts=16,
+        num_experts_per_tok=2,
+        d_ff_expert=14_336,
+        layer_period=2,
+        layer_offset=1,
+    ),
+    ssm=SSMConfig(state_size=16, conv_width=4, expand=2),
+    attn_layer_period=8,
+    attn_layer_offset=4,
+    mlp_glu=True,
+    activation="silu",
+)

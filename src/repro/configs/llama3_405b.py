@@ -1,0 +1,21 @@
+"""llama3-405b — frontier-scale dense decoder LM. [arXiv:2407.21783; unverified]
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256, RoPE theta 500k,
+SwiGLU.  FSDP + zero-1 optimizer sharding are mandatory at this size.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=126,
+    d_model=16_384,
+    num_heads=128,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=53_248,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    mlp_glu=True,
+    activation="silu",
+)

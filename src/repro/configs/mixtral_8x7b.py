@@ -1,0 +1,23 @@
+"""mixtral-8x7b — sparse MoE LM with sliding-window attention. [arXiv:2401.04088; hf]
+
+32L d_model=4096 32H (GQA kv=8) per-expert d_ff=14336 vocab=32000,
+MoE 8 experts top-2, SWA window 4096 (rolling KV cache => sub-quadratic
+long-context decode, so ``long_500k`` runs with an O(window) cache).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=0,
+    vocab_size=32_000,
+    rope_theta=1_000_000.0,
+    sliding_window=4096,
+    moe=MoEConfig(num_experts=8, num_experts_per_tok=2, d_ff_expert=14_336),
+    mlp_glu=True,
+    activation="silu",
+)

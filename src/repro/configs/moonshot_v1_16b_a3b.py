@@ -1,0 +1,30 @@
+"""moonshot-v1-16b-a3b (Moonlight-16B-A3B) — fine-grained MoE LM.
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+
+48L d_model=2048 16H (kv=16) per-expert d_ff=1408 vocab=163840, MoE 64
+experts top-6 (DeepSeek-V3-style fine-grained experts; the released model
+additionally uses shared experts + a dense first layer — we include 2 shared
+experts to match the "a3b" active-parameter budget and note the adaptation in
+DESIGN.md).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=0,
+    vocab_size=163_840,
+    rope_theta=50_000.0,
+    moe=MoEConfig(
+        num_experts=64,
+        num_experts_per_tok=6,
+        d_ff_expert=1408,
+        num_shared_experts=2,
+    ),
+    mlp_glu=True,
+    activation="silu",
+)

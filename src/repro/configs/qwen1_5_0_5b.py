@@ -1,0 +1,22 @@
+"""qwen1.5-0.5b — dense decoder LM. [hf:Qwen/Qwen1.5-0.5B; hf]
+
+24L d_model=1024 16H (GQA kv=16 i.e. MHA) d_ff=2816 vocab=151936, QKV bias,
+RoPE, SwiGLU, tied embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=2816,
+    vocab_size=151_936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    mlp_glu=True,
+    activation="silu",
+    tie_embeddings=True,
+)

@@ -1,0 +1,25 @@
+"""seamless-m4t-large-v2 — encoder-decoder speech/text backbone. [arXiv:2308.11596; hf]
+
+24L (enc) + 24L (dec), d_model=1024 16H (kv=16) d_ff=8192 vocab=256206.
+Per instructions the audio frontend (w2v-BERT conformer feature extractor) is
+a STUB: ``input_specs()`` supplies precomputed frame embeddings of shape
+(batch, frames, d_model); the backbone here is the transformer enc-dec with
+cross-attention.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=24,
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256_206,
+    rope_theta=10_000.0,
+    mlp_glu=False,
+    activation="gelu",
+    frontend="audio",
+)

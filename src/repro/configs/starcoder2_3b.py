@@ -1,0 +1,22 @@
+"""starcoder2-3b — dense decoder LM, extreme GQA. [arXiv:2402.19173; hf]
+
+30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152, RoPE, plain GELU MLP
+(4x expansion, non-gated), attention + MLP biases per the released config.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    family="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    d_ff=12_288,
+    vocab_size=49_152,
+    qkv_bias=True,
+    rope_theta=100_000.0,
+    mlp_glu=False,
+    activation="gelu",
+    tie_embeddings=True,
+)

@@ -1,0 +1,175 @@
+"""GradSync — the paper's communication mechanisms as one composable module.
+
+Usage (inside a ``shard_map`` over the data-parallel axes)::
+
+    sync = GradSync(GradSyncConfig(strategy="ring"), grads_example)
+    reduced, new_residuals = sync(local_grads, axis_sizes={"data": 16}, residuals=res)
+
+The strategy names correspond 1:1 to the paper's mechanisms (§3, §8):
+
+===================  ========================================================
+``psum``             XLA's native all-reduce (the fabric's in-network
+                     aggregation — the TPU baseline).
+``ring``             Horovod ring-reduce, manual ppermute schedule.
+``ring+multicast``   ring first phase + fabric broadcast second phase (§8.4).
+``butterfly``        butterfly mixing (full-buffer XOR exchange, log2 W).
+``rabenseifner``     recursive halving/doubling (cited, beyond-paper).
+``ps``               parameter-server emulation: per-owner regions,
+                     reduce-scatter onto owners + all-gather.  Round-robin
+                     owner assignment reproduces TF's byte imbalance
+                     (Table 7) as padding waste; size_balanced fixes it
+                     (Table 8).
+``hierarchical``     pod-local ring reduce-scatter + cross-pod psum +
+                     pod-local all-gather (multi-pod schedule).
+===================  ========================================================
+
+Compression (§10) composes with any strategy: ``int8`` swaps the ring for a
+quantised ring; ``topk`` performs error-feedback sparsified exchange.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bucketing as B
+from repro.core import collectives as C
+from repro.core import compression as Z
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GradSyncConfig:
+    strategy: str = "psum"
+    axis_name: str = "data"
+    pod_axis: str = ""                 # non-empty => also reduce across pods
+    bucket_bytes: int = 32 * 1024 * 1024
+    max_message_bytes: int = 0         # 0 => no message chunking (§9.2 off)
+    assignment: str = "round_robin"    # PS owner placement (§9.1)
+    num_owners: int = 0                # 0 => axis size
+    compression: str = ""              # "" | "int8" | "topk"
+    topk_fraction: float = 0.01
+    average: bool = True
+
+
+class GradSync:
+    """Precomputes bucketing/assignment for a fixed gradient structure."""
+
+    def __init__(self, cfg: GradSyncConfig, grads_example: PyTree):
+        self.cfg = cfg
+        self.leaves = B.leaves_of(grads_example)
+        self.treedef = jax.tree.structure(grads_example)
+        self.buckets = B.build_buckets(self.leaves, cfg.bucket_bytes)
+        if cfg.max_message_bytes:
+            self.buckets = B.chunk_buckets(self.buckets, self.leaves, cfg.max_message_bytes)
+        sizes = [l.size for l in self.leaves]
+        self.owners = B.assign_owners(
+            sizes, cfg.num_owners or 1, cfg.assignment
+        )
+
+    # -- stateful compressor support -----------------------------------------
+    def init_residuals(self) -> Optional[List[jax.Array]]:
+        if self.cfg.compression != "topk":
+            return None
+        return [jnp.zeros((self._padded_size(b),), jnp.float32) for b in self.buckets]
+
+    def _padded_size(self, bucket: B.Bucket) -> int:
+        n = sum(self.leaves[i].size for i in bucket.leaf_ids)
+        align = 512  # lcm-ish alignment: covers ring(W<=512) and int8 blocks
+        return n + ((-n) % align)
+
+    # -- main entry ------------------------------------------------------------
+    def __call__(
+        self,
+        grads: PyTree,
+        axis_sizes: Dict[str, int],
+        residuals: Optional[List[jax.Array]] = None,
+    ) -> Tuple[PyTree, Optional[List[jax.Array]]]:
+        cfg = self.cfg
+        W = axis_sizes[cfg.axis_name]
+        pod = axis_sizes.get(cfg.pod_axis, 1) if cfg.pod_axis else 1
+        flat = jax.tree.leaves(grads)
+        out_flat: List[Optional[jax.Array]] = [None] * len(flat)
+        new_residuals: Optional[List[jax.Array]] = [] if residuals is not None else None
+
+        if cfg.strategy == "ps":
+            reduced = self._ps_sync(flat, W)
+            for i, g in reduced.items():
+                out_flat[i] = g
+        else:
+            # int8 rings need each ring chunk (len/W) divisible by the quant
+            # block, so align to W * QBLOCK
+            align = 512 if cfg.compression != "int8" else max(512, W * Z.QBLOCK)
+            for bi, bucket in enumerate(self.buckets):
+                buf = B.pack(flat, bucket, align=align)
+                res = residuals[bi] if residuals is not None else None
+                buf, res = self._reduce_buffer(buf, res, W)
+                if new_residuals is not None:
+                    new_residuals.append(res)
+                for i, g in B.unpack(buf, bucket, self.leaves).items():
+                    out_flat[i] = g
+
+        denom = W * pod if cfg.average else 1
+        if denom != 1:
+            out_flat = [g / denom for g in out_flat]
+        out_flat = [g.astype(l.dtype) for g, l in zip(out_flat, self.leaves)]
+        return jax.tree.unflatten(self.treedef, out_flat), new_residuals
+
+    # -- single packed buffer --------------------------------------------------
+    def _reduce_buffer(self, buf, residual, W):
+        cfg = self.cfg
+        if cfg.compression == "int8":
+            red = Z.int8_ring_all_reduce(buf, cfg.axis_name, W)
+        elif cfg.compression == "topk":
+            red, residual = Z.topk_ef_all_reduce(
+                buf, residual, cfg.axis_name, W, cfg.topk_fraction
+            )
+        elif cfg.strategy == "hierarchical":
+            red = C.hierarchical_all_reduce(buf, cfg.axis_name, W, cfg.pod_axis or "pod")
+        else:
+            red = C.ALL_REDUCE_FNS[cfg.strategy](buf, cfg.axis_name, W)
+        if cfg.pod_axis and cfg.strategy != "hierarchical":
+            red = jax.lax.psum(red, cfg.pod_axis)
+        return red, residual
+
+    # -- PS emulation ------------------------------------------------------------
+    def _ps_sync(self, flat: Sequence[jax.Array], W: int) -> Dict[int, jax.Array]:
+        """Pack per-owner regions (padded to the max owner load — round-robin
+        assignment pays its imbalance as padding bandwidth), reduce-scatter
+        onto owners, all-gather back."""
+        cfg = self.cfg
+        num_owners = cfg.num_owners or W
+        owners = B.assign_owners(
+            [l.size for l in self.leaves], num_owners, cfg.assignment
+        )
+        regions: List[List[int]] = [[] for _ in range(num_owners)]
+        for i, o in enumerate(owners):
+            regions[o].append(i)
+        region_sizes = [sum(self.leaves[i].size for i in r) for r in regions]
+        R = max(max(region_sizes), 1)
+        R += (-R) % 8
+        packed = []
+        for r in regions:
+            parts = [flat[i].reshape(-1).astype(jnp.float32) for i in r] or [
+                jnp.zeros((0,), jnp.float32)
+            ]
+            buf = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+            packed.append(jnp.pad(buf, (0, R - buf.size)))
+        # owners live on shards 0..num_owners-1 of the axis; pad to W regions
+        stack = jnp.stack(packed + [jnp.zeros((R,), packed[0].dtype)] * (W - num_owners))
+        chunk = jax.lax.psum_scatter(stack, cfg.axis_name, scatter_dimension=0)
+        full = jax.lax.all_gather(chunk, cfg.axis_name)
+        out: Dict[int, jax.Array] = {}
+        for o, r in enumerate(regions):
+            off = 0
+            for i in r:
+                n = self.leaves[i].size
+                out[i] = jax.lax.dynamic_slice_in_dim(full[o], off, n).reshape(
+                    self.leaves[i].shape
+                )
+                off += n
+        return out

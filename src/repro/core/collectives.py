@@ -1,0 +1,196 @@
+"""Manual collective algorithms — the paper's mechanisms as JAX primitives.
+
+Each function runs *inside* ``shard_map`` (it uses ``lax.ppermute`` /
+``lax.axis_index`` over a named mesh axis) and implements one of the
+communication schedules the paper studies:
+
+* ``ring_reduce_scatter`` / ``ring_all_gather`` / ``ring_all_reduce`` —
+  Horovod-style ring-reduce (§3.3.2), the paper's winning mechanism.  The
+  all-gather second phase is the paper's "second ring"; on TPU the ICI
+  broadcast of that phase is the multicast analogue (§8.4).
+* ``butterfly_all_reduce`` — butterfly mixing (§3.3.2): log2(W) stages, the
+  *entire* buffer exchanged with the XOR partner each stage.
+* ``rhd_all_reduce`` — Rabenseifner recursive halving/doubling [24]: the
+  bandwidth-optimal cousin the paper cites; included beyond the paper's two
+  host mechanisms.
+* ``ps_reduce_scatter_gather`` — the parameter-server emulation: buckets are
+  reduced onto *owner* shards (aggregation phase) and re-broadcast
+  (distribution phase).  Ownership assignment — round-robin vs size-balanced
+  (§9.1, Tables 7-8) — is chosen by the bucketing layer.
+* ``hierarchical_all_reduce`` — pod-local reduce-scatter, cross-pod
+  all-reduce over DCN, pod-local all-gather: the multi-pod schedule.
+
+All ring/butterfly algorithms require the buffer length to be divisible by
+the axis size; ``repro.core.bucketing.pack`` guarantees that.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _ring_perm(W: int) -> List[Tuple[int, int]]:
+    return [(i, (i + 1) % W) for i in range(W)]
+
+
+# --------------------------------------------------------------------- ring
+def ring_reduce_scatter(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """1-D ``x`` (len divisible by W) -> local reduced chunk (len/W).
+
+    Chunk ``c`` starts at device ``c+1`` and travels the ring for W-1 hops,
+    accumulating each device's contribution, ending at device ``c``.  At hop
+    ``t`` device ``d`` therefore holds the chunk that started at ``d-t``,
+    i.e. chunk ``c = d-t-1``.
+    """
+    W = axis_size
+    if W == 1:
+        return x
+    d = lax.axis_index(axis_name)
+    chunks = x.reshape(W, -1)
+    perm = _ring_perm(W)
+    buf = jnp.take(chunks, jnp.mod(d - 1, W), axis=0)
+
+    def step(buf, t):
+        buf = lax.ppermute(buf, axis_name, perm)
+        c = jnp.mod(d - t - 1, W)
+        return buf + jnp.take(chunks, c, axis=0), None
+
+    buf, _ = lax.scan(step, buf, jnp.arange(1, W))
+    return buf
+
+
+def ring_all_gather(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """Local chunk (n,) -> full buffer (W*n,) via W-1 ring hops."""
+    W = axis_size
+    if W == 1:
+        return x
+    d = lax.axis_index(axis_name)
+    perm = _ring_perm(W)
+    out = jnp.zeros((W,) + x.shape, x.dtype)
+    out = out.at[d].set(x)
+
+    def step(carry, t):
+        piece, out = carry
+        piece = lax.ppermute(piece, axis_name, perm)
+        out = out.at[jnp.mod(d - t, W)].set(piece)
+        return (piece, out), None
+
+    (_, out), _ = lax.scan(step, (x, out), jnp.arange(1, W))
+    return out.reshape((-1,) + x.shape[1:])
+
+
+def ring_all_reduce(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    return ring_all_gather(ring_reduce_scatter(x, axis_name, axis_size), axis_name, axis_size)
+
+
+def ring_all_reduce_multicast_phase2(
+    x: jax.Array, axis_name: str, axis_size: int
+) -> jax.Array:
+    """Ring-reduce first ring + *multicast* second phase (§8.4): the gather
+    is done with the fabric's native broadcast (XLA all-gather over ICI)
+    instead of a second ppermute ring."""
+    chunk = ring_reduce_scatter(x, axis_name, axis_size)
+    return lax.all_gather(chunk, axis_name, tiled=True)
+
+
+# ----------------------------------------------------------------- butterfly
+def butterfly_all_reduce(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """Butterfly mixing: at stage s exchange the FULL buffer with partner
+    ``d xor 2^s`` and add.  log2(W) stages; W must be a power of two."""
+    W = axis_size
+    assert W & (W - 1) == 0, "butterfly requires power-of-two axis size"
+    s = 1
+    while s < W:
+        perm = [(i, i ^ s) for i in range(W)]
+        x = x + lax.ppermute(x, axis_name, perm)
+        s <<= 1
+    return x
+
+
+# -------------------------------------------------------------- rabenseifner
+def rhd_all_reduce(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """Rabenseifner: recursive-halving reduce-scatter then recursive-doubling
+    all-gather.  Bandwidth 2(W-1)/W * n like ring, but log2(W) latency."""
+    W = axis_size
+    assert W & (W - 1) == 0, "rhd requires power-of-two axis size"
+    if W == 1:
+        return x
+    d = lax.axis_index(axis_name)
+    n = x.size
+
+    # --- reduce-scatter by halving ------------------------------------------
+    # working set: a window of x, halved each stage.  Represent the window
+    # implicitly: at stage s the buffer length is n >> (s+1).
+    buf = x
+    s = 1
+    while s < W:
+        half = buf.size // 2
+        lo, hi = buf[:half], buf[half:]
+        partner_has_high = (d & s) == 0   # we keep low if bit clear
+        perm = [(i, i ^ s) for i in range(W)]
+        # send the half we are NOT keeping; receive partner's matching half
+        outgoing = jnp.where(partner_has_high, hi, lo)
+        incoming = lax.ppermute(outgoing, axis_name, perm)
+        buf = jnp.where(partner_has_high, lo + incoming, hi + incoming)
+        s <<= 1
+
+    # --- all-gather by doubling ----------------------------------------------
+    s = W >> 1
+    while s >= 1:
+        perm = [(i, i ^ s) for i in range(W)]
+        other = lax.ppermute(buf, axis_name, perm)
+        keep_low = (d & s) == 0
+        # device with bit clear holds the low half of the merged window
+        buf = jnp.where(keep_low, jnp.concatenate([buf, other]),
+                        jnp.concatenate([other, buf]))
+        s >>= 1
+    return buf
+
+
+# ------------------------------------------------------------------ PS model
+def ps_reduce_scatter_gather(
+    x: jax.Array, axis_name: str, axis_size: int
+) -> jax.Array:
+    """Parameter-server emulation: aggregation = reduce onto owner shards
+    (XLA reduce-scatter — the in-network-aggregation analogue, since the ICI
+    reduces hop-by-hop), distribution = broadcast back (all-gather — the
+    multicast analogue).  Bucket->owner placement is decided upstream by
+    reordering ``x`` (see bucketing.assign_owners)."""
+    chunk = lax.psum_scatter(x.reshape(axis_size, -1), axis_name, scatter_dimension=0, tiled=False)
+    return lax.all_gather(chunk, axis_name, tiled=False).reshape(x.shape)
+
+
+# ---------------------------------------------------------------- hierarchical
+def hierarchical_all_reduce(
+    x: jax.Array,
+    inner_axis: str,
+    inner_size: int,
+    outer_axis: str,
+    use_ring_inner: bool = True,
+) -> jax.Array:
+    """Multi-pod schedule: reduce-scatter inside the pod (fast ICI), a single
+    all-reduce of the 1/W-sized shard across pods (slow DCN), then all-gather
+    inside the pod.  Cross-pod traffic shrinks by the pod size — the paper's
+    'keep the scarce link off the critical path' lesson applied to DCN."""
+    if use_ring_inner:
+        chunk = ring_reduce_scatter(x, inner_axis, inner_size)
+        chunk = lax.psum(chunk, outer_axis)
+        return ring_all_gather(chunk, inner_axis, inner_size)
+    chunk = lax.psum_scatter(x.reshape(inner_size, -1), inner_axis, scatter_dimension=0)
+    chunk = lax.psum(chunk, outer_axis)
+    return lax.all_gather(chunk, inner_axis).reshape(x.shape)
+
+
+# ------------------------------------------------------------------ registry
+ALL_REDUCE_FNS = {
+    "ring": ring_all_reduce,
+    "ring+multicast": ring_all_reduce_multicast_phase2,
+    "butterfly": butterfly_all_reduce,
+    "rabenseifner": rhd_all_reduce,
+    "ps": ps_reduce_scatter_gather,
+    "psum": lambda x, axis_name, axis_size: lax.psum(x, axis_name),
+}

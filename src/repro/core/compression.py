@@ -1,0 +1,102 @@
+"""Gradient compression (§10): int8 quantised collectives + top-k error feedback.
+
+The paper's position is that compression "is analogous to using a smaller
+CNN".  We implement it as a first-class option of the gradient-sync layer so
+the roofline collective term can actually be bought down:
+
+* ``int8``  — blockwise symmetric quantisation; the ring reduce-scatter hops
+  carry int8 + one fp32 scale per block (4.05x wire-size reduction at
+  block=128 vs bf16), dequant-accumulate-requant at every hop (the error of
+  re-quantising k partial sums grows O(log W); fine for SGD-class updates).
+* ``topk``  — error-feedback top-k sparsification (Deep Gradient Compression
+  [20]): each shard sends its k largest-magnitude entries; the residual is
+  fed back into the next step locally, making the compressor unbiased over
+  time.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as C
+
+QBLOCK = 128
+
+
+# ------------------------------------------------------------------- int8
+def quantize_int8(x: jax.Array, block: int = QBLOCK) -> Tuple[jax.Array, jax.Array]:
+    """x: 1-D (len divisible by block) -> (int8 values, fp32 per-block scales)."""
+    xb = x.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(-1)
+
+
+def int8_ring_all_reduce(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """Ring all-reduce whose wire format is int8 (+fp32 block scales).
+
+    Reduce-scatter phase: the in-flight chunk is dequantised, the local
+    contribution added, and the sum re-quantised before the next hop.
+    All-gather phase: the final chunks travel once, still int8.
+    """
+    W = axis_size
+    if W == 1:
+        return x
+    d = lax.axis_index(axis_name)
+    chunks = x.reshape(W, -1)
+    perm = [(i, (i + 1) % W) for i in range(W)]
+
+    q0, s0 = quantize_int8(jnp.take(chunks, jnp.mod(d - 1, W), axis=0))
+
+    def rs_step(carry, t):
+        q, s = carry
+        q = lax.ppermute(q, axis_name, perm)
+        s = lax.ppermute(s, axis_name, perm)
+        c = jnp.mod(d - t - 1, W)
+        acc = dequantize_int8(q, s) + jnp.take(chunks, c, axis=0).astype(jnp.float32)
+        return quantize_int8(acc), None
+
+    (q, s), _ = lax.scan(rs_step, (q0, s0), jnp.arange(1, W))
+    # all-gather phase (wire stays int8)
+    qg = C.ring_all_gather(q.reshape(-1), axis_name, axis_size).reshape(W * q.shape[0], QBLOCK)
+    sg = C.ring_all_gather(s.reshape(-1), axis_name, axis_size).reshape(-1, 1)
+    return dequantize_int8(qg, sg).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- top-k
+def topk_compress(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Return (values, indices) of the k largest-magnitude entries of 1-D x."""
+    _, idx = lax.top_k(jnp.abs(x), k)
+    return x[idx], idx
+
+
+def topk_ef_all_reduce(
+    x: jax.Array,
+    residual: jax.Array,
+    axis_name: str,
+    axis_size: int,
+    k_fraction: float = 0.01,
+) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback top-k all-reduce.
+
+    Returns (reduced approximation of psum(x), new residual).  Wire cost is
+    ``2 * k * W`` words instead of ``2n(W-1)/W`` for the ring.
+    """
+    g = x.astype(jnp.float32) + residual
+    k = max(1, int(x.size * k_fraction))
+    vals, idx = topk_compress(g, k)
+    new_residual = g.at[idx].set(0.0)
+    # exchange (vals, idx) with everyone; scatter-add into a dense buffer
+    all_vals = lax.all_gather(vals, axis_name)          # (W, k)
+    all_idx = lax.all_gather(idx, axis_name)            # (W, k)
+    dense = jnp.zeros((x.size,), jnp.float32)
+    dense = dense.at[all_idx.reshape(-1)].add(all_vals.reshape(-1))
+    return dense.astype(x.dtype), new_residual

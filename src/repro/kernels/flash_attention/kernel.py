@@ -1,0 +1,132 @@
+"""Flash-attention forward Pallas kernel (TPU target, interpret-validated).
+
+Online-softmax blocked attention.  Grid = (B, H, num_q_blocks, num_kv_blocks)
+with the kv dimension innermost and marked "arbitrary" (sequential) so the
+(bq, hd) fp32 accumulator + (bq,) running max / denominator live in VMEM
+scratch across kv steps.  BlockSpecs tile HBM->VMEM as:
+
+    q:  (1, 1, bq, hd)    per (b, h, qi)   — revisited for every kv step
+    k/v:(1, 1, bk, hd)    per (b, h//G, ki) — GQA folds kv-head indexing into
+                                              the index_map (no materialised
+                                              head broadcast in HBM)
+
+MXU alignment: bq/bk default 128 (the MXU systolic dimension), hd is padded
+by the wrapper to a multiple of 128 when needed.  Causal + sliding-window
+masking and gemma-style logit soft-capping are fused into the kv loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, bq: int, bk: int, num_kv: int, causal: bool, window: int,
+    softcap: float, scale: float, q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                    # (bq, bk)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # guard fully-masked rows: keep exp() finite
+    m_safe = jnp.where(m_cur == NEG_INF, 0.0, m_cur)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == num_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "bq", "bk", "q_offset", "interpret",
+    ),
+)
+def flash_attention_fwd(
+    q: jax.Array,                 # (B, H, Sq, hd)
+    k: jax.Array,                 # (B, Hk, Sk, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    bq: int = 128,
+    bk: int = 128,
+    q_offset: int = 0,
+    interpret: bool = True,       # CPU container: interpret; TPU: False
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    Hk, Sk = k.shape[1], k.shape[2]
+    G = H // Hk
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    num_q, num_kv = Sq // bq, Sk // bk
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=bq, bk=bk, num_kv=num_kv, causal=causal, window=window,
+        softcap=softcap, scale=scale, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, num_q, num_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,86 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Accepts model-layout tensors (B, S, H, hd) (as produced by
+``repro.models.attention``), handles layout transposition, head-dim padding
+to the 128-lane MXU width, and provides a ``jax.custom_vjp`` whose backward
+pass recomputes attention through the pure-jnp reference (flash backward
+kernel is future work; the recompute keeps training correct with the fused
+forward).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref as R
+
+
+def _pad_hd(x, hd_pad):
+    if hd_pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, hd_pad)))
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def _flash(q, k, v, causal, window, softcap, interpret):
+    # layout: (B, S, H, hd) -> (B, H, S, hd)
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    hd = qt.shape[-1]
+    pad = (-hd) % 128
+    if pad:
+        # kernel scales by 1/sqrt(hd+pad); pre-scale q to net 1/sqrt(hd)
+        qt = _pad_hd(qt * (((hd + pad) / hd) ** 0.5), pad)
+        kt = _pad_hd(kt, pad)
+        vt = _pad_hd(vt, pad)
+    out = K.flash_attention_fwd(
+        qt, kt, vt,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        interpret=interpret,
+    )
+    if pad:
+        out = out[..., :hd]
+    return out.swapaxes(1, 2)
+
+
+def _flash_fwd(q, k, v, causal, window, softcap, interpret):
+    return _flash(q, k, v, causal, window, softcap, interpret), (q, k, v)
+
+
+def _flash_bwd(causal, window, softcap, interpret, res, g):
+    q, k, v = res
+
+    def ref_fn(q, k, v):
+        out = R.attention_ref(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal=causal, window=window, softcap=softcap,
+        )
+        return out.swapaxes(1, 2)
+
+    _, vjp = jax.vjp(ref_fn, q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,               # (B, S, H, hd)
+    k: jax.Array,               # (B, S, Hk, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused attention; returns (B, S, H, hd)."""
+    return _flash(q, k, v, causal, window, softcap, interpret)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel (the ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(
+    q: jax.Array,                # (B, H, Sq, hd)
+    k: jax.Array,                # (B, Hk, Sk, hd)
+    v: jax.Array,                # (B, Hk, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,             # 0 = full; else sliding window width
+    softcap: float = 0.0,
+    q_offset: int = 0,           # absolute position of q[0] (decode/prefill)
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    Hk = k.shape[1]
+    Sk = k.shape[2]
+    G = H // Hk
+    qf = q.astype(jnp.float32) / np.sqrt(hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, Hk, G, Sq, hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,74 @@
+"""Blockwise int8 quantise / dequantise Pallas kernels.
+
+Used by the compressed gradient all-reduce (repro.core.compression): the
+quantise step runs once per ring hop, so it is a bandwidth-critical
+elementwise kernel.  Tiles of (rows, 128) live in VMEM; the per-row absmax
+reduction and the scaled round happen in one pass (single HBM read, two small
+writes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 128
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (rows, 128)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0, 1e-12)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def quantize_pallas(x: jax.Array, *, rows: int = 256, interpret: bool = True):
+    """x: 1-D, length divisible by 128."""
+    n = x.size // QBLOCK
+    rows = min(rows, n)
+    if n % rows:
+        rows = n
+    xb = x.reshape(n, QBLOCK)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(n // rows,),
+        in_specs=[pl.BlockSpec((rows, QBLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, QBLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def dequantize_pallas(q: jax.Array, s: jax.Array, *, rows: int = 256,
+                      interpret: bool = True) -> jax.Array:
+    n = q.shape[0]
+    rows = min(rows, n)
+    if n % rows:
+        rows = n
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(n // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, QBLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, QBLOCK), jnp.float32),
+        interpret=interpret,
+    )(q, s)
+    return out.reshape(-1)

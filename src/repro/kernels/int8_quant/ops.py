@@ -1,0 +1,7 @@
+"""Public wrappers for the int8 quantisation kernels."""
+from repro.kernels.int8_quant.kernel import dequantize_pallas, quantize_pallas
+
+quantize = quantize_pallas
+dequantize = dequantize_pallas
+
+__all__ = ["quantize", "dequantize", "quantize_pallas", "dequantize_pallas"]

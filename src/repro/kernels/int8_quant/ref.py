@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for blockwise int8 quantisation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array, block: int = 128):
+    xb = x.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(-1)

@@ -1,0 +1,97 @@
+"""Chunked selective-scan Pallas kernel (Mamba-1, TPU target).
+
+Grid = (B, D/bd, S/bs) with the sequence dimension innermost and sequential;
+the (bd, N) fp32 state lives in VMEM scratch across sequence chunks, so HBM
+traffic is exactly one read of (x, dt, B, C) and one write of y — the
+recurrence never round-trips the state, which is the whole point of the
+hardware-aware scan (the paper-for-this-kernel's GPU analogue keeps state in
+SRAM/registers; VMEM scratch is the TPU analogue).
+
+Within a chunk the recurrence is a ``fori_loop`` over time steps operating on
+(bd, N) tiles — vectorised across the channel block and the (small, =16)
+state dimension, sequential in t, which matches the VPU's preference for
+long-lane elementwise work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, a_log_ref, b_ref, c_ref, h0_ref,
+                 y_ref, hout_ref, h_ref, *, bs: int, num_chunks: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = h0_ref[0]
+
+    A = -jnp.exp(a_log_ref[...].astype(jnp.float32))          # (bd, N)
+
+    def step(t, _):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)            # (bd,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)
+        b_t = b_ref[0, t, :].astype(jnp.float32)              # (N,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)
+        a = jnp.exp(dt_t[:, None] * A)                        # (bd, N)
+        bx = (dt_t * x_t)[:, None] * b_t[None, :]
+        h = a * h_ref[...] + bx
+        h_ref[...] = h
+        y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bs, step, 0)
+
+    @pl.when(si == num_chunks - 1)
+    def _finish():
+        hout_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bd", "interpret"))
+def selective_scan_pallas(
+    x: jax.Array,      # (B, S, D) fp32
+    dt: jax.Array,     # (B, S, D) fp32
+    a_log: jax.Array,  # (D, N): A = -exp(a_log)
+    b: jax.Array,      # (B, S, N)
+    c: jax.Array,      # (B, S, N)
+    h0: jax.Array,     # (B, D, N)
+    *,
+    bs: int = 64,
+    bd: int = 256,
+    interpret: bool = True,
+):
+    B, S, D = x.shape
+    N = a_log.shape[1]
+    bs = min(bs, S)
+    bd = min(bd, D)
+    assert S % bs == 0 and D % bd == 0, (S, bs, D, bd)
+    num_chunks = S // bs
+
+    kernel = functools.partial(_scan_kernel, bs=bs, num_chunks=num_chunks)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, D // bd, num_chunks),
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b_, di, si: (b_, si, di)),
+            pl.BlockSpec((1, bs, bd), lambda b_, di, si: (b_, si, di)),
+            pl.BlockSpec((bd, N), lambda b_, di, si: (di, 0)),
+            pl.BlockSpec((1, bs, N), lambda b_, di, si: (b_, si, 0)),
+            pl.BlockSpec((1, bs, N), lambda b_, di, si: (b_, si, 0)),
+            pl.BlockSpec((1, bd, N), lambda b_, di, si: (b_, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b_, di, si: (b_, si, di)),
+            pl.BlockSpec((1, bd, N), lambda b_, di, si: (b_, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, b, c, h0)
+    return y, h_final

@@ -1,0 +1,36 @@
+"""Public wrapper for the selective-scan kernel (matches mamba.selective_scan)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan import kernel as K
+
+
+def selective_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,            # (D, N), negative (A = -exp(A_log))
+    B_: jax.Array,
+    C_: jax.Array,
+    h0: jax.Array,
+    *,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Drop-in for ``repro.models.mamba.selective_scan`` (kernel path).
+
+    The kernel consumes ``a_log`` with A = -exp(a_log); the model stores
+    ``A_log`` with A = -exp(A_log) as well, so we invert the caller's A here.
+    """
+    a_log = jnp.log(-A.astype(jnp.float32))
+    return K.selective_scan_pallas(
+        x.astype(jnp.float32),
+        dt.astype(jnp.float32),
+        a_log,
+        B_.astype(jnp.float32),
+        C_.astype(jnp.float32),
+        h0.astype(jnp.float32),
+        interpret=interpret,
+    )

@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): AOT lower + compile every
+(architecture x input-shape) cell on the production meshes, and extract the
+roofline terms (deliverable g) from the compiled artifact.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+    python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+    python -m repro.launch.dryrun --all [--multi-pod] [--jobs 4]
+
+Every invocation writes/updates ``dryrun_results/<mesh>/<arch>__<shape>.json``
+with: memory_analysis, cost_analysis, per-collective wire bytes, the three
+roofline terms, and compile time.  ``--all`` drives each cell in a fresh
+subprocess (isolation + parallelism); completed cells are skipped unless
+``--force``.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "dryrun_results")
+
+
+def _cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    return os.path.join(RESULTS_DIR, mesh, f"{arch}__{shape}.json")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, perf: str = "") -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import cell_runnable, get_config, get_shape
+    from repro.launch import specs as S
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shardings import ShardingPlan
+    from repro.models import model as M
+    from repro.optim import OptConfig
+    from repro.roofline import model_flops, roofline_terms
+    from repro.roofline.analytic import cell_flops_per_chip, cell_hbm_bytes_per_chip
+    from repro.roofline.hlo_parse import collective_bytes_trip_aware
+    from repro.train import steps as steps_lib
+
+    cell = cell_runnable(arch, shape_name)
+    if not cell.runnable:
+        return {"arch": arch, "shape": shape_name, "skipped": cell.skip_reason}
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    plan = ShardingPlan(cfg, mesh)
+    kind, cell_specs = S.input_specs(arch, shape_name)
+
+    perf_list = [f for f in perf.split(",") if f]
+    if perf_list:
+        from repro.models.perf import set_flags
+        kv = {}
+        for f in perf_list:
+            if "=" in f:
+                k, v = f.split("=", 1)
+                kv[k] = v
+            else:
+                kv[f] = True
+        set_flags(mesh=mesh, batch_axes=plan.batch_axes,
+                  **{k: v for k, v in kv.items() if k != "grad_zero1"})
+        if "grad_zero1" in kv:
+            set_flags(grad_zero1=True)
+    t0 = time.time()
+
+    if kind == "train":
+        ga = S.grad_accum_for(arch, shape)
+        params_sh = plan.param_shardings(cell_specs[0])
+        opt_sh = plan.shardings_for({
+            "step": P(),
+            "m": plan.param_specs(cell_specs[0], zero1=True),
+            "v": plan.param_specs(cell_specs[0], zero1=True),
+            "master": plan.param_specs(cell_specs[0], zero1=True),
+        })
+        axes = plan.batch_axes
+        bspec = (lambda x: P(None, axes, *([None] * (x.ndim - 2)))) if ga > 1 \
+            else (lambda x: P(axes, *([None] * (x.ndim - 1))))
+        batch_sh = plan.shardings_for(jax.tree.map(bspec, cell_specs[2]))
+        grad_sh = None
+        if "grad_zero1" in perf_list:
+            grad_sh = plan.shardings_for(
+                plan.param_specs(cell_specs[0], zero1=True)
+            )
+        step = steps_lib.make_train_step(cfg, OptConfig(), grad_accum=ga,
+                                         grad_shardings=grad_sh)
+        fn = jax.jit(
+            step,
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        tokens = shape.global_batch * shape.seq_len
+    elif kind == "prefill":
+        params_sh = plan.param_shardings(cell_specs[0])
+        axes = plan.batch_axes
+        batch_sh = plan.shardings_for(
+            jax.tree.map(lambda x: P(axes, *([None] * (x.ndim - 1))), cell_specs[1])
+        )
+        fn = jax.jit(
+            lambda p, b: M.prefill(p, b, cfg, max_len=shape.seq_len),
+            in_shardings=(params_sh, batch_sh),
+        )
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode
+        params_sh = plan.param_shardings(cell_specs[0])
+        cache_sh = plan.shardings_for(plan.cache_specs(cell_specs[2]))
+        tok_axes = plan.batch_axes
+        total_b = 1
+        for a in tok_axes:
+            total_b *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+        tok_spec = P(tok_axes, None) if shape.global_batch % total_b == 0 else P()
+        fn = jax.jit(
+            lambda p, t, c: M.decode_step(p, t, c, cfg),
+            in_shardings=(params_sh, plan.shardings_for(tok_spec), cache_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(2,),
+        )
+        tokens = shape.global_batch  # one token per sequence per step
+
+    lowered = fn.lower(*cell_specs)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes", "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_d[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if k in ("flops", "bytes accessed", "transcendentals",
+                       "bytes accessed0{}", "bytes accessed1{}", "utilization")}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes_trip_aware(
+        hlo, chips, pod_group_size=2 if multi_pod else None
+    )
+    n_params = cfg.param_count()
+    ga = S.grad_accum_for(arch, shape)
+    fl = cell_flops_per_chip(cfg, shape, chips)
+    hb = cell_hbm_bytes_per_chip(cfg, shape, chips, grad_accum=ga)
+    n_active = int(fl["active_params"])
+    # analytic compute/memory terms (XLA cost_analysis undercounts scan
+    # bodies — raw numbers retained below for reference)
+    analytic_cost = {"flops": fl["per_chip"], "bytes accessed": hb["per_chip"]}
+    mfl = model_flops(n_params, tokens, "train" if kind == "train" else "serve",
+                      n_active)
+    terms = roofline_terms(analytic_cost, coll, chips, mfl)
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "perf": perf_list,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "params": int(n_params),
+        "active_params": int(n_active),
+        "tokens_per_step": int(tokens),
+        "grad_accum": int(ga),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis_raw": cost_d,
+        "analytic_flops_per_chip": fl["per_chip"],
+        "analytic_hbm_bytes_per_chip": hb["per_chip"],
+        "collective_bytes": {k: float(v) for k, v in coll.items()},
+        "roofline": terms,
+    }
+
+
+def _run_subprocess(arch: str, shape: str, multi_pod: bool) -> subprocess.Popen:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)   # the child sets its own
+    return subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+
+
+def run_all(multi_pod: bool, jobs: int, force: bool) -> int:
+    from repro.configs import all_cells
+
+    cells = [c for c in all_cells()]
+    todo = []
+    for c in cells:
+        path = _cell_path(c.arch, c.shape, multi_pod)
+        if not force and os.path.exists(path):
+            continue
+        todo.append(c)
+    print(f"dry-run: {len(todo)} cells to run ({len(cells) - len(todo)} cached)")
+    running: list = []
+    failed = []
+    while todo or running:
+        while todo and len(running) < jobs:
+            c = todo.pop(0)
+            print(f"  launch {c.arch} x {c.shape}")
+            running.append((c, _run_subprocess(c.arch, c.shape, multi_pod)))
+        for (c, p) in list(running):
+            if p.poll() is None:
+                continue
+            running.remove((c, p))
+            out = p.stdout.read()
+            if p.returncode != 0:
+                failed.append((c, out[-2000:]))
+                print(f"  FAIL {c.arch} x {c.shape}\n{out[-2000:]}")
+            else:
+                print(f"  done {c.arch} x {c.shape}")
+        time.sleep(0.5)
+    print(f"dry-run complete: {len(failed)} failures")
+    return 1 if failed else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--perf", default="",
+                    help="comma list: loss_sharding,bf16_grad_accum,"
+                         "norm_bf16_bwd,grad_zero1,moe_ep")
+    args = ap.parse_args()
+
+    if args.all:
+        return run_all(args.multi_pod, args.jobs, args.force)
+
+    path = _cell_path(args.arch, args.shape, args.multi_pod)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    try:
+        res = run_cell(args.arch, args.shape, args.multi_pod, args.perf)
+    except Exception:
+        res = {
+            "arch": args.arch, "shape": args.shape, "error": traceback.format_exc()
+        }
+        with open(path + ".err", "w") as f:
+            json.dump(res, f, indent=2)
+        print(json.dumps({"error": res["error"][-1500:]}, indent=2))
+        return 1
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    summary = {k: res.get(k) for k in
+               ("arch", "shape", "kind", "mesh", "skipped", "compile_s")}
+    if "roofline" in res:
+        summary["bottleneck"] = res["roofline"]["bottleneck"]
+        summary["terms_ms"] = {
+            k: round(res["roofline"][k] * 1e3, 3)
+            for k in ("compute_s", "memory_s", "collective_s")
+        }
+        summary["mfu_at_bound"] = round(res["roofline"]["mfu_at_bound"], 4)
+    print(json.dumps(summary, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

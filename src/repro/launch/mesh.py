@@ -1,0 +1,26 @@
+"""Production mesh construction (dry-run target: v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run driver sets ``XLA_FLAGS`` before the first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips across 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dp_mesh(workers: int, pods: int = 1):
+    """Pure data-parallel mesh for the explicit paper-strategy runtime."""
+    if pods > 1:
+        return jax.make_mesh((pods, workers), ("pod", "data"))
+    return jax.make_mesh((workers,), ("data",))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,206 @@
+"""Sharding plans: PartitionSpecs for params / optimizer state / batches / caches.
+
+Rules (DESIGN.md §5):
+  * TP over the ``model`` axis: attention heads, FFN hidden, experts, vocab.
+  * FSDP over ``data`` for large archs (and always for optimizer state —
+    that is zero-1).
+  * multi-pod: the ``pod`` axis composes with ``data`` for the batch; weights
+    are replicated across pods (gradient sync crosses pods — hierarchical).
+  * every rule checks divisibility and degrades to the next-best axis
+    (e.g. kv-heads < model-axis => shard head_dim instead; odd vocab =>
+    replicate) so all 10 archs produce valid specs on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+FSDP_PARAM_THRESHOLD = 8e9        # params; above this, shard weights over data
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+class ShardingPlan:
+    """Derives all PartitionSpecs for one (config, mesh) pair."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, fsdp: Optional[bool] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model_size = _axis(mesh, "model")
+        self.data_size = _axis(mesh, "data")
+        self.pod_size = _axis(mesh, "pod")
+        self.batch_axes: Tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if _axis(mesh, a) > 1
+        ) or ("data",)
+        if fsdp is None:
+            fsdp = cfg.param_count() > FSDP_PARAM_THRESHOLD
+        self.fsdp = fsdp
+
+    # ------------------------------------------------------------- helpers
+    def _m(self, dim: int) -> Optional[str]:
+        """'model' if the axis exists and dim divides, else None."""
+        if "model" not in self.mesh.axis_names:
+            return None
+        return "model" if _div(dim, self.model_size) else None
+
+    def _f(self, dim: int, force: bool = False) -> Optional[str]:
+        """'data' (fsdp) if enabled+divisible."""
+        if "data" not in self.mesh.axis_names:
+            return None
+        if (self.fsdp or force) and _div(dim, self.data_size):
+            return "data"
+        return None
+
+    # ------------------------------------------------------- per-leaf rule
+    def _leaf_spec(self, path: str, shape: Tuple[int, ...], zero1: bool) -> P:
+        cfg = self.cfg
+        s = list(shape)
+        stacked = path.startswith("['blocks']") or path.startswith("['enc_blocks']")
+        if stacked:
+            s = s[1:]                     # drop the layer-group stack dim
+
+        def out(*spec):
+            spec = list(spec) + [None] * (len(s) - len(spec))
+            if stacked:
+                spec = [None] + spec
+            return P(*spec)
+
+        f = (lambda d: self._f(d, force=zero1))
+        m = self._m
+
+        if "embed" in path or "lm_head" in path:            # (V, d)
+            return out(m(s[0]), f(s[1]))
+        if len(s) == 1:                                      # norms, biases, D
+            if zero1:
+                return out(f(s[0]) or m(s[0]))
+            return out(None)
+        if "'wq'" in path:                                   # (d, H, hd)
+            mh = m(s[1])
+            return out(f(s[0]), mh, None if mh else m(s[2]))
+        if "'wk'" in path or "'wv'" in path:                 # (d, Hk, hd)
+            mk = m(s[1])
+            return out(f(s[0]), mk, None if mk else m(s[2]))
+        if "'wo'" in path and len(s) == 3:                   # (H, hd, d)
+            mh = m(s[0])
+            return out(mh, None if mh else m(s[1]), f(s[2]))
+        if "'bq'" in path or "'bk'" in path or "'bv'" in path:
+            return out(None, None)
+        if "moe" in path and len(s) == 3:                    # (E, d, f) / (E, f, d)
+            me = m(s[0])
+            if "'wi'" in path or "'wg'" in path:
+                return out(me, f(s[1]), None if me else m(s[2]))
+            return out(me, None if me else m(s[1]), f(s[2]))
+        if "router" in path:                                 # (d, E)
+            return out(f(s[0]), None)
+        if "shared_wi" in path or "shared_wg" in path:       # (d, fs)
+            return out(f(s[0]), m(s[1]))
+        if "shared_wo" in path:                              # (fs, d)
+            return out(m(s[0]), f(s[1]))
+        if "'in_proj'" in path:                              # (d, 2*di)
+            return out(f(s[0]), m(s[1]))
+        if "'conv_w'" in path:                               # (W, di)
+            return out(None, m(s[1]))
+        if "'x_proj'" in path:                               # (di, R+2N)
+            return out(m(s[0]), None)
+        if "'dt_proj'" in path:                              # (R, di)
+            return out(None, m(s[1]))
+        if "'A_log'" in path:                                # (di, N)
+            return out(m(s[0]), None)
+        if "'out_proj'" in path:                             # (di, d)
+            return out(m(s[0]), f(s[1]))
+        if "'wi'" in path or "'wg'" in path:                 # mlp (d, f)
+            return out(f(s[0]), m(s[1]))
+        if "'wo'" in path:                                   # mlp (f, d)
+            return out(m(s[0]), f(s[1]))
+        return out(*([None] * len(s)))
+
+    # --------------------------------------------------------------- trees
+    def param_specs(self, params_shape: PyTree, zero1: bool = False) -> PyTree:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+        specs = [
+            self._leaf_spec(jax.tree_util.keystr(path), tuple(x.shape), zero1)
+            for path, x in flat
+        ]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def param_shardings(self, params_shape: PyTree, zero1: bool = False) -> PyTree:
+        return jax.tree.map(
+            lambda spec: NamedSharding(self.mesh, spec),
+            self.param_specs(params_shape, zero1),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    # batches: tokens (B, S) etc.
+    def batch_spec(self) -> P:
+        return P(self.batch_axes)
+
+    def batch_specs(self, batch_shape: PyTree) -> PyTree:
+        b = self.batch_axes
+
+        def spec(x):
+            if _div(x.shape[0], int(np.prod([_axis(self.mesh, a) for a in b]))):
+                return P(b, *([None] * (len(x.shape) - 1)))
+            return P(*([None] * len(x.shape)))
+
+        return jax.tree.map(spec, batch_shape)
+
+    # decode caches: {"k"/"v": (B, S, Hk, hd)} + mamba states + pos
+    def cache_specs(self, cache_shape: PyTree) -> PyTree:
+        bsz_axes = self.batch_axes
+        total_b = int(np.prod([_axis(self.mesh, a) for a in bsz_axes]))
+
+        def spec(path, x):
+            p = jax.tree_util.keystr(path)
+            s = x.shape
+            if "pos" in p:
+                return P()
+            stacked = "'layers'" in p or "memory_kv" in p
+            core = list(s[1:]) if stacked else list(s)
+            out = [None] * len(core)
+            # batch dim
+            if _div(core[0], total_b):
+                out[0] = bsz_axes
+            elif core[0] == 1 and len(core) >= 2 and _div(core[1], self.data_size):
+                # long-context single-request: shard the sequence dim
+                out[1] = "data"
+            if "'k'" in p or "'v'" in p:
+                # kv heads / head_dim over model
+                if len(core) == 4:
+                    if _div(core[2], self.model_size):
+                        out[2] = "model"
+                    elif _div(core[3], self.model_size):
+                        out[3] = "model"
+            elif "'conv'" in p:                    # (B, W-1, di)
+                if _div(core[2], self.model_size):
+                    out[2] = "model"
+            elif "'ssm'" in p:                     # (B, di, N)
+                if _div(core[1], self.model_size):
+                    out[1] = "model"
+            if stacked:
+                out = [None] + out
+            return P(*out)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+        return jax.tree_util.tree_unflatten(
+            treedef, [spec(p, x) for p, x in flat]
+        )
+
+    def shardings_for(self, specs: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda spec: NamedSharding(self.mesh, spec),
+            specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )

@@ -1,0 +1,115 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` returns abstract inputs only — no device allocation — in the
+exact structure the corresponding step function consumes:
+
+  * train cells   -> (params, opt_state, batch) for ``train_step``
+  * prefill cells -> (params, batch) for ``prefill_step``
+  * decode cells  -> (params, token, cache) for ``serve_step``
+
+Modality frontends are stubbed here per the assignment: seamless gets
+precomputed (B, S, d_model) frame embeddings; chameleon's VQ image tokens are
+ordinary ids inside its unified vocab.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import init_opt_state
+
+PyTree = Any
+
+# per-arch microbatch accumulation for train_4k (activation-memory budget)
+TRAIN_GRAD_ACCUM = {
+    "qwen1.5-0.5b": 1,
+    "starcoder2-3b": 2,
+    "gemma2-2b": 2,
+    "llama3-405b": 8,   # microbatch 32: divisible on both 16x16 and 2x16x16
+    "seamless-m4t-large-v2": 2,
+    "falcon-mamba-7b": 8,
+    "moonshot-v1-16b-a3b": 4,
+    "mixtral-8x7b": 8,
+    "chameleon-34b": 8,
+    "jamba-v0.1-52b": 8,
+}
+
+
+def grad_accum_for(arch: str, shape: ShapeConfig) -> int:
+    if shape.kind != "train":
+        return 1
+    return TRAIN_GRAD_ACCUM.get(arch, 1)
+
+
+def params_shape(cfg: ModelConfig, seed: int = 0) -> PyTree:
+    return jax.eval_shape(lambda k: M.init_params(k, cfg), jax.random.PRNGKey(seed))
+
+
+def opt_state_shape(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(init_opt_state, params_shape(cfg))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, grad_accum: int = 1) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if grad_accum > 1:
+        assert B % grad_accum == 0, (B, grad_accum)
+        mb = B // grad_accum
+        b = {
+            "tokens": jax.ShapeDtypeStruct((grad_accum, mb, S), tok),
+            "labels": jax.ShapeDtypeStruct((grad_accum, mb, S), tok),
+        }
+        if cfg.is_encoder_decoder:
+            b["frames"] = jax.ShapeDtypeStruct(
+                (grad_accum, mb, S, cfg.d_model), jnp.bfloat16
+            )
+        return b
+    b = {
+        "tokens": jax.ShapeDtypeStruct((B, S), tok),
+        "labels": jax.ShapeDtypeStruct((B, S), tok),
+    }
+    if cfg.is_encoder_decoder:
+        b["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    b = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        b["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def cache_shape(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+
+
+def decode_token_spec(shape: ShapeConfig):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+def input_specs(arch: str, shape_name: str) -> Tuple[str, Tuple]:
+    """Returns (kind, specs-tuple) for the cell's step function."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape.kind == "train":
+        ga = grad_accum_for(arch, shape)
+        return "train", (
+            params_shape(cfg),
+            opt_state_shape(cfg),
+            batch_specs(cfg, shape, ga),
+        )
+    if shape.kind == "prefill":
+        return "prefill", (params_shape(cfg), prefill_specs(cfg, shape))
+    return "decode", (
+        params_shape(cfg),
+        decode_token_spec(shape),
+        cache_shape(cfg, shape),
+    )

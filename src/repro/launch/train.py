@@ -1,0 +1,82 @@
+"""Training launcher.
+
+Examples:
+    # CPU smoke run (reduced arch, tiny shapes)
+    PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --smoke --steps 20
+
+    # explicit paper-strategy gradient sync on an 8-way DP mesh (fake devices)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --strategy ring --mesh 8
+
+    # production shapes (real pod; this process would be one host of the pod)
+    python -m repro.launch.train --arch llama3-405b --shape train_4k --mesh 16,16
+
+On a real multi-host pod this process calls ``jax.distributed.initialize()``
+(env-driven) before building the mesh; single-process here.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--mesh", default="", help="comma mesh shape, e.g. 16,16")
+    ap.add_argument("--strategy", default="gspmd",
+                    help="gspmd|ring|ring+multicast|butterfly|rabenseifner|ps|hierarchical|psum")
+    ap.add_argument("--compression", default="", help="''|int8|topk")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--distributed", action="store_true",
+                    help="multi-host: jax.distributed.initialize() from env")
+    args = ap.parse_args()
+
+    import jax
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    from repro.optim import OptConfig
+    from repro.train import TrainConfig, Trainer
+
+    mesh_shape = tuple(int(x) for x in args.mesh.split(",")) if args.mesh else ()
+    tcfg = TrainConfig(
+        arch=args.arch,
+        shape=args.shape,
+        smoke=args.smoke,
+        steps=args.steps,
+        mesh_shape=mesh_shape,
+        strategy=args.strategy,
+        compression=args.compression,
+        grad_accum=args.grad_accum,
+        batch_override=args.batch,
+        seq_override=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        log_every=args.log_every,
+        opt=OptConfig(lr=args.lr, warmup_steps=args.warmup,
+                      total_steps=max(args.steps, 1000)),
+    )
+    tr = Trainer(tcfg)
+    tr.init_or_restore()
+    res = tr.run()
+    print(f"done: {res}")
+    if tcfg.ckpt_dir:
+        tr.save()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

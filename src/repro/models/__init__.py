@@ -1,0 +1,22 @@
+"""Model zoo: all 10 assigned architectures via a single assembly path."""
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    layer_period,
+    loss_fn,
+    num_groups,
+    prefill,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "layer_period",
+    "loss_fn",
+    "num_groups",
+    "prefill",
+]

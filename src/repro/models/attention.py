@@ -1,0 +1,293 @@
+"""GQA attention: q-chunked training/prefill path, cached decode path.
+
+Features covered (union of the 10 assigned archs): grouped-query attention,
+RoPE, QKV bias, QK-norm, sliding-window (rolling cache), gemma2 local/global
+alternation, attention logit soft-capping, cross-attention (enc-dec).
+
+The training/prefill path is **q-chunked**: a ``lax.scan`` over query chunks
+with ``jax.checkpoint`` per chunk keeps the materialised score tensor at
+(B, H, chunk, S) instead of (B, H, S, S) — this is the XLA-path analogue of
+the Pallas flash kernel in ``repro/kernels`` (which can be swapped in with
+``use_flash=True``) and is what makes the 4k/32k dry-run cells memory-sane.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+DEFAULT_Q_CHUNK = 512
+NEG_INF = -2.0e38
+
+
+# ----------------------------------------------------------------------- params
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, H, Hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, H, hd), in_axis=0, dtype=dt),
+        "wk": dense_init(ks[1], (d, Hk, hd), in_axis=0, dtype=dt),
+        "wv": dense_init(ks[2], (d, Hk, hd), in_axis=0, dtype=dt),
+        "wo": dense_init(ks[3], (H, hd, d), in_axis=0, dtype=dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((Hk, hd), dt)
+        p["bv"] = jnp.zeros((Hk, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array],
+    rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,Hk,hd); RoPE applied to q,k."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.models.perf import cast_bwd
+
+    q, k, v = cast_bwd(q), cast_bwd(k), cast_bwd(v)
+    q, k, v = _constrain_qkv(q, k, v, cfg)
+    return q, k, v
+
+
+def _constrain_qkv(q, k, v, cfg: ModelConfig):
+    """§Perf H5: pin (B, S, H, hd) layouts — batch over the batch axes, heads
+    over 'model' (head_dim when heads don't divide) — so GSPMD never invents
+    kv-sequence-sharded attention with f32 cross-shard reductions."""
+    from repro.models.perf import FLAGS, constraint
+
+    mesh = FLAGS["mesh"]
+    if not FLAGS["attn_sharding"] or mesh is None:
+        return q, k, v
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes.get("model", 1)
+    ba = FLAGS["batch_axes"]
+    nb = int(np.prod([sizes.get(a, 1) for a in ba]))
+
+    def spec_for(x):
+        B, S, H, hd = x.shape
+        bspec = ba if B % max(nb, 1) == 0 else None
+        if H % msize == 0:
+            return (bspec, None, "model", None)
+        if hd % msize == 0:
+            return (bspec, None, None, "model")
+        return (bspec, None, None, None)
+
+    return (constraint(spec_for(q))(q), constraint(spec_for(k))(k),
+            constraint(spec_for(v))(v))
+
+
+def _scores_to_probs(scores: jax.Array, mask: jax.Array, softcap: float) -> jax.Array:
+    scores = scores.astype(jnp.float32)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask, scores, NEG_INF)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+# ------------------------------------------------------------------- full pass
+def attention(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    local: bool = False,
+    positions: Optional[jax.Array] = None,
+    q_chunk: int = DEFAULT_Q_CHUNK,
+    use_flash: bool = False,
+    causal: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Self-attention over a full sequence (causal by default; encoders pass
+    ``causal=False``).
+
+    Returns (output (B,S,d), kv dict for cache construction).
+    ``local`` selects the sliding window (for SWA / gemma2 local layers).
+    """
+    B, S, _ = x.shape
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    window = cfg.sliding_window if local and cfg.sliding_window else 0
+
+    if use_flash and causal:
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(
+            q, k, v,
+            causal=True,
+            window=window,
+            softcap=cfg.attn_logit_softcap,
+        )
+    else:
+        out = _chunked_attention(
+            q, k, v, window, cfg.attn_logit_softcap, q_chunk, causal
+        )
+    from repro.models.perf import cast_bwd
+
+    out = cast_bwd(out.astype(x.dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k, "v": v}
+
+
+def _chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    window: int,
+    softcap: float,
+    q_chunk: int,
+    causal: bool = True,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    scale = 1.0 / np.sqrt(hd)
+    C = min(q_chunk, S)
+    if S % C:
+        C = S  # fall back to unchunked for ragged smoke shapes
+    n_chunks = S // C
+
+    # GQA convention: consecutive q heads share a kv head (kv = h // G)
+    qg = (q * scale).reshape(B, n_chunks, C, Hk, G, hd)
+    kv_pos = jnp.arange(S)
+
+    @jax.checkpoint
+    def one_chunk(carry, inputs):
+        qc, q0 = inputs                         # (B, C, Hk, G, hd), scalar
+        q_pos = q0 + jnp.arange(C)
+        if causal:
+            mask = kv_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+        else:
+            mask = jnp.ones((C, S), bool)
+        s = jnp.einsum("bchgk,bshk->bhgcs", qc, k)
+        p = _scores_to_probs(s, mask[None, None, None, :, :], softcap)
+        o = jnp.einsum("bhgcs,bshk->bchgk", p.astype(v.dtype), v)
+        return carry, o
+
+    starts = jnp.arange(n_chunks) * C
+    _, out = jax.lax.scan(
+        one_chunk, None, (qg.swapaxes(0, 1), starts)
+    )  # out: (n_chunks, B, C, Hk, G, hd)
+    out = out.swapaxes(0, 1).reshape(B, S, H, hd)
+    return out
+
+
+# ------------------------------------------------------------------ cross attn
+def cross_attention(
+    params: Params,
+    x: jax.Array,
+    memory_kv: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (no mask)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+    k, v = memory_kv["k"], memory_kv["v"]
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    B, S, _, _ = q.shape
+    G = H // Hk
+    qg = (q / np.sqrt(hd)).reshape(B, S, Hk, G, hd)
+    s = jnp.einsum("bchgk,bshk->bhgcs", qg, k)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bhgcs,bshk->bchgk", p.astype(v.dtype), v).reshape(B, S, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), params["wo"])
+
+
+def encode_memory_kv(params: Params, memory: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"])
+    if cfg.qk_norm:
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------- decode
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, local: bool
+) -> Dict[str, jax.Array]:
+    """Cache slots.  Rolling (size=window) for local/SWA layers."""
+    Hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    C = min(cfg.sliding_window, max_len) if (local and cfg.sliding_window) else max_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros((batch, C, Hk, hd), dt),
+        "v": jnp.zeros((batch, C, Hk, hd), dt),
+    }
+
+
+def cache_from_prefill(
+    kv: Dict[str, jax.Array], cfg: ModelConfig, max_len: int, local: bool
+) -> Dict[str, jax.Array]:
+    """Arrange prefill K/V into decode cache slots (slot(p) = p mod C)."""
+    k, v = kv["k"], kv["v"]
+    B, S = k.shape[:2]
+    C = min(cfg.sliding_window, max_len) if (local and cfg.sliding_window) else max_len
+    if C >= S:
+        pad = [(0, 0), (0, C - S), (0, 0), (0, 0)]
+        return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    # slot i holds the newest position p < S with p mod C == i
+    i = jnp.arange(C)
+    p = S - 1 - ((S - 1 - i) % C)
+    return {"k": k[:, p], "v": v[:, p]}
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,
+    cfg: ModelConfig,
+    *,
+    local: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, d); pos: scalar int32 (tokens so far).
+
+    Writes the new K/V at slot ``pos mod C`` then attends over the cache.
+    RoPE'd keys are stored, so no absolute positions are needed at read time.
+    """
+    B = x.shape[0]
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+
+    C = cache["k"].shape[1]
+    slot = jnp.mod(pos, C)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    G = H // Hk
+    qg = (q / np.sqrt(hd)).reshape(B, Hk, G, hd)
+    s = jnp.einsum("bhgk,bshk->bhgs", qg, ck)            # (B, Hk, G, C)
+    valid = jnp.arange(C)[None, None, None, :] <= pos    # cold-start masking
+    p = _scores_to_probs(s, valid, cfg.attn_logit_softcap)
+    o = jnp.einsum("bhgs,bshk->bhgk", p.astype(cv.dtype), cv).reshape(B, 1, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), params["wo"])
+    return y, {"k": ck, "v": cv}

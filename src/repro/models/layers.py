@@ -1,0 +1,146 @@
+"""Shared neural-net building blocks (pure JAX, dict-pytree params)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def compute_dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# --------------------------------------------------------------------------- init
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- norm
+def _rms_norm_f32(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms_norm_bf16_bwd(x, scale, eps):
+    return _rms_norm_f32(x, scale, eps)
+
+
+def _rnb_fwd(x, scale, eps):
+    return _rms_norm_f32(x, scale, eps), (x, scale)
+
+
+def _rnb_bwd(eps, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda a, s: _rms_norm_f32(a, s, eps), x, scale)
+    dx, dscale = vjp(g)
+    # bf16 boundary cotangent => backward TP collectives run at bf16 (§Perf H3)
+    return dx.astype(x.dtype), dscale
+
+
+_rms_norm_bf16_bwd.defvjp(_rnb_fwd, _rnb_bwd)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm in fp32 (optionally with bf16 backward boundary, see perf.py)."""
+    from repro.models.perf import FLAGS
+
+    if FLAGS["norm_bf16_bwd"]:
+        return _rms_norm_bf16_bwd(x, scale, eps)
+    return _rms_norm_f32(x, scale, eps)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# --------------------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs          # (..., S, hd/2)
+    angles = angles[..., None, :]                                      # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- mlp
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], (d, f), dtype=dt),
+        "wo": dense_init(ks[1], (f, d), dtype=dt),
+    }
+    if cfg.mlp_glu:
+        p["wg"] = dense_init(ks[2], (d, f), dtype=dt)
+    return p
+
+
+def mlp(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    h = x @ params["wi"]
+    if cfg.mlp_glu:
+        h = act(x @ params["wg"]) * h
+    else:
+        h = act(h)
+    return h @ params["wo"]
+
+
+# --------------------------------------------------------------------------- embed
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    return {"table": embed_init(key, (cfg.vocab_size, cfg.d_model), dtype_of(cfg))}
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["table"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Project to vocab logits (fp32); applies gemma-style final softcap."""
+    logits = jnp.einsum(
+        "...d,vd->...v", x, params["table"], preferred_element_type=jnp.float32
+    )
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap

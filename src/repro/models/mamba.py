@@ -1,0 +1,213 @@
+"""Mamba-1 selective-state-space block (falcon-mamba, jamba).
+
+Training/prefill uses a **chunked associative scan**: ``lax.scan`` over
+sequence chunks (rematerialised) carrying the (B, d_inner, N) state, with a
+parallel ``associative_scan`` inside each chunk.  This bounds the
+materialised state history to one chunk — the XLA-path analogue of the
+Pallas ``mamba_scan`` kernel (swap in with ``use_kernel=True``).
+
+Decode is a single-step recurrence over a constant-size state — this is what
+makes ``long_500k`` native for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+DEFAULT_CHUNK = 256
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    N = s.state_size
+    R = s.resolved_dt_rank(d)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dt),
+        "conv_w": dense_init(ks[1], (s.conv_width, di), dtype=dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, R + 2 * N), dtype=dt),
+        "dt_proj": dense_init(ks[3], (R, di), dtype=dt),
+        "dt_bias": jnp.full((di,), np.log(np.expm1(0.01)), jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype=dt),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, di); w: (W, di).  Left-padded causal depthwise conv.
+
+    Accumulates in fp32 (and the decode path mirrors the same order) so that
+    the step recurrence tracks the full-sequence path bit-for-bit as far as
+    bf16 storage allows.
+    """
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0))).astype(jnp.float32)
+    S = x.shape[1]
+    wf = w.astype(jnp.float32)
+    out = xp[:, 0:S, :] * wf[0]
+    for j in range(1, W):
+        out = out + xp[:, j : j + S, :] * wf[j]
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(params: Params, x_conv: jax.Array, cfg: ModelConfig):
+    """Project conv output to (dt, B, C) selective parameters (fp32)."""
+    s = cfg.ssm
+    N = s.state_size
+    R = s.resolved_dt_rank(cfg.d_model)
+    proj = x_conv @ params["x_proj"]                               # (B,S,R+2N)
+    dt_r, B_, C_ = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"]
+    )                                                              # (B,S,di)
+    A = -jnp.exp(params["A_log"])                                  # (di,N)
+    return dt, A, B_.astype(jnp.float32), C_.astype(jnp.float32)
+
+
+def selective_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B_: jax.Array,
+    C_: jax.Array,
+    h0: jax.Array,
+    chunk: int = DEFAULT_CHUNK,
+) -> Tuple[jax.Array, jax.Array]:
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+
+    x, dt: (B,S,di); A: (di,N); B_, C_: (B,S,N); h0: (B,di,N) fp32.
+    Returns (y (B,S,di) fp32, h_final).
+    """
+    B, S, di = x.shape
+    N = A.shape[1]
+    ch = min(chunk, S)
+    if S % ch:
+        ch = S
+    nc = S // ch
+
+    a = jnp.exp(dt[..., None] * A)                                 # (B,S,di,N)
+    bx = (dt * x.astype(jnp.float32))[..., None] * B_[:, :, None, :]
+    a = a.reshape(B, nc, ch, di, N).swapaxes(0, 1)
+    bx = bx.reshape(B, nc, ch, di, N).swapaxes(0, 1)
+    c = C_.reshape(B, nc, ch, N).swapaxes(0, 1)
+
+    def combine(left, right):
+        (al, bl), (ar, br) = left, right
+        return al * ar, ar * bl + br
+
+    @jax.checkpoint
+    def chunk_step(h, inputs):
+        ac, bxc, cc = inputs                                       # (B,ch,di,N)...
+        pa, pb = jax.lax.associative_scan(combine, (ac, bxc), axis=1)
+        h_all = pa * h[:, None] + pb                               # (B,ch,di,N)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, cc)
+        return h_all[:, -1], y
+
+    h_final, y = jax.lax.scan(chunk_step, h0, (a, bx, c))
+    y = y.swapaxes(0, 1).reshape(B, S, di)
+    return y, h_final
+
+
+def mamba_forward(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    chunk: int = DEFAULT_CHUNK,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Full-sequence Mamba block.  x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    s = cfg.ssm
+    di = s.expand * d
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_causal_depthwise_conv(x_in, params["conv_w"], params["conv_b"]))
+    dt, A, B_, C_ = _ssm_inputs(params, x_conv, cfg)
+    h0 = jnp.zeros((B, di, s.state_size), jnp.float32)
+    if use_kernel:
+        from repro.kernels.mamba_scan import ops as scan_ops
+
+        y, _ = scan_ops.selective_scan(x_conv.astype(jnp.float32), dt, A, B_, C_, h0)
+    else:
+        y, _ = selective_scan(x_conv.astype(jnp.float32), dt, A, B_, C_, h0, chunk)
+    y = y + params["D"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"]
+
+
+# ------------------------------------------------------------------- decode
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, di), jnp.dtype(cfg.compute_dtype)),
+        "ssm": jnp.zeros((batch, di, s.state_size), jnp.float32),
+    }
+
+
+def state_from_prefill(
+    params: Params, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Run the full-sequence path AND return the decode state at position S-1."""
+    B, S, d = x.shape
+    s = cfg.ssm
+    di = s.expand * d
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_causal_depthwise_conv(x_in, params["conv_w"], params["conv_b"]))
+    dt, A, B_, C_ = _ssm_inputs(params, x_conv, cfg)
+    h0 = jnp.zeros((B, di, s.state_size), jnp.float32)
+    y, h_final = selective_scan(x_conv.astype(jnp.float32), dt, A, B_, C_, h0)
+    y = y + params["D"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    conv_tail = x_in[:, S - (s.conv_width - 1):, :].astype(jnp.dtype(cfg.compute_dtype))
+    return out, {"conv": conv_tail, "ssm": h_final}
+
+
+def mamba_step(
+    params: Params, x: jax.Array, state: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrence.  x: (B, 1, d)."""
+    B = x.shape[0]
+    s = cfg.ssm
+    xz = x[:, 0, :] @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                            # (B, di)
+
+    window = jnp.concatenate(
+        [state["conv"], x_in[:, None, :].astype(state["conv"].dtype)], axis=1
+    )                                                              # (B, W, di)
+    wf = params["conv_w"].astype(jnp.float32)
+    win32 = window.astype(jnp.float32)
+    W = win32.shape[1]
+    acc = win32[:, 0, :] * wf[0]
+    for j in range(1, W):
+        acc = acc + win32[:, j, :] * wf[j]
+    x_conv = (acc + params["conv_b"].astype(jnp.float32)).astype(x_in.dtype)
+    x_conv = jax.nn.silu(x_conv)
+    new_conv = window[:, 1:, :]
+
+    dt, A, B_, C_ = _ssm_inputs(params, x_conv[:, None, :], cfg)
+    dt, B_, C_ = dt[:, 0], B_[:, 0], C_[:, 0]                      # (B,di),(B,N)
+    a = jnp.exp(dt[..., None] * A)                                 # (B,di,N)
+    bx = (dt * x_conv.astype(jnp.float32))[..., None] * B_[:, None, :]
+    h = a * state["ssm"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, C_)
+    y = y + params["D"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": h}

@@ -1,0 +1,518 @@
+"""Model assembly: init / forward / loss / prefill / decode for all 10 archs.
+
+Layer stacks are organised as ``G`` groups of ``P`` layers, where ``P`` is the
+least common multiple of the arch's interleave patterns (gemma2 local/global:
+2, jamba attn:mamba + MoE: 8, everything else: 1).  Groups are homogeneous, so
+the stack is a single rematerialised ``lax.scan`` over stacked group params —
+this keeps the HLO size O(P) instead of O(num_layers), which is what makes the
+126-layer llama3-405b cell compilable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+
+Params = Dict[str, Any]
+PyTree = Any
+
+TOKEN_LOSS_CHUNK = 8192
+
+
+# =========================================================================
+# structure
+# =========================================================================
+def layer_period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.attn_layer_period:
+        p = math.lcm(p, cfg.attn_layer_period)
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.layer_period)
+    if cfg.local_global_period:
+        p = math.lcm(p, cfg.local_global_period)
+    assert cfg.num_layers % p == 0, (cfg.name, cfg.num_layers, p)
+    return p
+
+
+def num_groups(cfg: ModelConfig) -> int:
+    return cfg.num_layers // layer_period(cfg)
+
+
+def _has_ffn(cfg: ModelConfig) -> bool:
+    return cfg.d_ff > 0 or cfg.moe is not None
+
+
+# =========================================================================
+# init
+# =========================================================================
+def _init_one_layer(key, cfg: ModelConfig, j: int, *, decoder_cross: bool) -> Params:
+    ks = jax.random.split(key, 8)
+    sub: Params = {}
+    if cfg.is_attn_layer(j):
+        sub["ln_attn"] = L.init_rms_norm(cfg.d_model)
+        sub["attn"] = attn_lib.init_attention(ks[0], cfg)
+        if cfg.post_block_norm:
+            sub["ln_attn_post"] = L.init_rms_norm(cfg.d_model)
+        if decoder_cross:
+            sub["ln_cross"] = L.init_rms_norm(cfg.d_model)
+            sub["cross"] = attn_lib.init_attention(ks[1], cfg, cross=True)
+    elif cfg.ssm is not None:
+        sub["ln_mamba"] = L.init_rms_norm(cfg.d_model)
+        sub["mamba"] = mamba_lib.init_mamba(ks[2], cfg)
+    if cfg.is_moe_layer(j):
+        sub["ln_ffn"] = L.init_rms_norm(cfg.d_model)
+        sub["moe"] = moe_lib.init_moe(ks[3], cfg)
+        if cfg.post_block_norm:
+            sub["ln_ffn_post"] = L.init_rms_norm(cfg.d_model)
+    elif cfg.d_ff > 0:
+        sub["ln_ffn"] = L.init_rms_norm(cfg.d_model)
+        sub["mlp"] = L.init_mlp(ks[4], cfg)
+        if cfg.post_block_norm:
+            sub["ln_ffn_post"] = L.init_rms_norm(cfg.d_model)
+    return sub
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": L.init_rms_norm(cfg.d_model),
+        "attn": attn_lib.init_attention(ks[0], cfg),
+        "ln_ffn": L.init_rms_norm(cfg.d_model),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    P = layer_period(cfg)
+    G = num_groups(cfg)
+    k_embed, k_head, k_layers, k_enc = jax.random.split(key, 4)
+    params: Params = {"embed": L.init_embedding(k_embed, cfg)}
+
+    groups = []
+    for g, kg in enumerate(jax.random.split(k_layers, G)):
+        sub_keys = jax.random.split(kg, P)
+        group = {
+            f"sub{j}": _init_one_layer(
+                sub_keys[j], cfg, j, decoder_cross=cfg.is_encoder_decoder
+            )
+            for j in range(P)
+        }
+        groups.append(group)
+    params["blocks"] = _stack(groups)
+    params["final_norm"] = L.init_rms_norm(cfg.d_model)
+
+    if cfg.is_encoder_decoder:
+        enc_groups = [
+            _init_enc_layer(k, cfg) for k in jax.random.split(k_enc, cfg.encoder_layers)
+        ]
+        params["enc_blocks"] = _stack(enc_groups)
+        params["enc_final_norm"] = L.init_rms_norm(cfg.d_model)
+
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_embedding(k_head, cfg)
+    return params
+
+
+def head_table(params: Params) -> jax.Array:
+    return (params.get("lm_head") or params["embed"])["table"]
+
+
+# =========================================================================
+# layer application (full-sequence mode)
+# =========================================================================
+def _apply_layer(
+    sub: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    j: int,
+    positions: jax.Array,
+    memory: Optional[jax.Array],
+    use_flash: bool,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (x, aux_loss, kv-or-None)."""
+    from repro.models.perf import residual_constraint, sublayer_barrier
+
+    x = residual_constraint(x)
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    if "attn" in sub:
+        h, kv = attn_lib.attention(
+            sub["attn"],
+            L.rms_norm(x, sub["ln_attn"]["scale"], cfg.norm_eps),
+            cfg,
+            local=cfg.is_local_layer(j),
+            positions=positions,
+            use_flash=use_flash,
+        )
+        h = sublayer_barrier(h)
+        if "ln_attn_post" in sub:
+            h = L.rms_norm(h, sub["ln_attn_post"]["scale"], cfg.norm_eps)
+        x = x + h
+        if "cross" in sub and memory is not None:
+            mem_kv = attn_lib.encode_memory_kv(sub["cross"], memory, cfg)
+            h = attn_lib.cross_attention(
+                sub["cross"],
+                L.rms_norm(x, sub["ln_cross"]["scale"], cfg.norm_eps),
+                mem_kv,
+                cfg,
+            )
+            x = x + sublayer_barrier(h)
+    elif "mamba" in sub:
+        h = mamba_lib.mamba_forward(
+            sub["mamba"], L.rms_norm(x, sub["ln_mamba"]["scale"], cfg.norm_eps), cfg
+        )
+        x = x + sublayer_barrier(h)
+    if "moe" in sub:
+        h, aux = moe_lib.moe_ffn(
+            sub["moe"], L.rms_norm(x, sub["ln_ffn"]["scale"], cfg.norm_eps), cfg
+        )
+        h = sublayer_barrier(h)
+        if "ln_ffn_post" in sub:
+            h = L.rms_norm(h, sub["ln_ffn_post"]["scale"], cfg.norm_eps)
+        x = x + h
+    elif "mlp" in sub:
+        h = L.mlp(sub["mlp"], L.rms_norm(x, sub["ln_ffn"]["scale"], cfg.norm_eps), cfg)
+        h = sublayer_barrier(h)
+        if "ln_ffn_post" in sub:
+            h = L.rms_norm(h, sub["ln_ffn_post"]["scale"], cfg.norm_eps)
+        x = x + h
+    return x, aux, kv
+
+
+def _encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, blk):
+        h, _ = attn_lib.attention(
+            blk["attn"],
+            L.rms_norm(x, blk["ln_attn"]["scale"], cfg.norm_eps),
+            cfg,
+            positions=positions,
+            causal=False,
+        )
+        x = x + h
+        x = x + L.mlp(blk["mlp"], L.rms_norm(x, blk["ln_ffn"]["scale"], cfg.norm_eps), cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_final_norm"]["scale"], cfg.norm_eps)
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    memory: Optional[jax.Array] = None,
+    use_flash: bool = False,
+    collect_kv: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[PyTree]]:
+    """Full-sequence decoder pass.
+
+    Returns (hidden (B,S,d), total aux loss, stacked per-group kv if requested).
+    ``memory``: encoder output for enc-dec archs.
+    """
+    P = layer_period(cfg)
+    x = L.embed(params["embed"], tokens, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, group):
+        x, aux = carry
+        kvs = {}
+        for j in range(P):
+            x, a, kv = _apply_layer(
+                group[f"sub{j}"], x, cfg, j, positions, memory, use_flash
+            )
+            aux = aux + a
+            if collect_kv and kv is not None:
+                kvs[f"sub{j}"] = kv
+        return (x, aux), (kvs if collect_kv else None)
+
+    (x, aux), kv_stack = jax.lax.scan(
+        jax.checkpoint(body), (x, jnp.zeros((), jnp.float32)), params["blocks"]
+    )
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return x, aux, kv_stack
+
+
+# =========================================================================
+# loss (seq-chunked cross entropy: never materialises (B,S,V) at once)
+# =========================================================================
+def chunked_xent(
+    table: jax.Array,
+    x: jax.Array,
+    labels: jax.Array,
+    cfg: ModelConfig,
+    z_loss: float = 1e-4,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d), labels: (B,S) with -1 = ignore.  Returns (sum_nll, n_tokens)."""
+    from repro.models.perf import FLAGS, constraint
+
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    lf = labels.reshape(T)
+    C = min(TOKEN_LOSS_CHUNK, T)
+    if T % C:
+        C = T
+    n = T // C
+    if FLAGS["loss_sharding"] and FLAGS["mesh"] is not None:
+        # keep tokens sharded over the batch axes within every chunk; GSPMD
+        # otherwise replicates chunks and all-reduces f32 logits (§Perf H1)
+        ba = FLAGS["batch_axes"]
+        xf = constraint((None, ba, None))(xf.reshape(n, C, d)).reshape(T, d)
+        lf = constraint((None, ba))(lf.reshape(n, C)).reshape(T)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        nll_sum, cnt = carry
+        xc, lc = inp
+        logits = jnp.einsum("td,vd->tv", xc, table, preferred_element_type=jnp.float32)
+        if cfg.final_logit_softcap:
+            logits = L.softcap(logits, cfg.final_logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[:, None], axis=1)[:, 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        nll = (lse - gold + z_loss * jnp.square(lse)) * valid
+        return (nll_sum + jnp.sum(nll), cnt + jnp.sum(valid)), None
+
+    (nll_sum, cnt), _ = jax.lax.scan(
+        chunk,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xf.reshape(n, C, d), lf.reshape(n, C)),
+    )
+    return nll_sum, cnt
+
+
+def loss_fn(
+    params: Params,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    use_flash: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory = _encode(params, batch["frames"], cfg)
+    x, aux, _ = forward(params, batch["tokens"], cfg, memory=memory, use_flash=use_flash)
+    nll_sum, cnt = chunked_xent(head_table(params), x, batch["labels"], cfg)
+    ce = nll_sum / jnp.maximum(cnt, 1.0)
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux, "tokens": cnt}
+
+
+# =========================================================================
+# serving: prefill + single-token decode
+# =========================================================================
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    """Zero-initialised decode cache (used for dry-run decode cells)."""
+    P = layer_period(cfg)
+    G = num_groups(cfg)
+
+    def one_group():
+        c = {}
+        for j in range(P):
+            if cfg.is_attn_layer(j):
+                c[f"sub{j}"] = attn_lib.init_kv_cache(
+                    cfg, batch, max_len, cfg.is_local_layer(j)
+                )
+            elif cfg.ssm is not None:
+                c[f"sub{j}"] = mamba_lib.init_mamba_state(cfg, batch)
+        return c
+
+    layers = _stack([one_group() for _ in range(G)])
+    cache: PyTree = {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        Hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.compute_dtype)
+        cache["memory_kv"] = {
+            f"{j}": _stack(
+                [
+                    {
+                        "k": jnp.zeros((batch, max_len, Hk, hd), dt),
+                        "v": jnp.zeros((batch, max_len, Hk, hd), dt),
+                    }
+                    for _ in range(G)
+                ]
+            )
+            for j in range(P)
+            if cfg.is_attn_layer(j)
+        }
+    return cache
+
+
+def prefill(
+    params: Params,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    max_len: int,
+    *,
+    use_flash: bool = False,
+) -> Tuple[jax.Array, PyTree]:
+    """Process the prompt; return (last-position logits (B,V), decode cache)."""
+    P = layer_period(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory = _encode(params, batch["frames"], cfg)
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, group):
+        x = carry
+        states = {}
+        for j in range(P):
+            sub = group[f"sub{j}"]
+            if "attn" in sub:
+                h, kv = attn_lib.attention(
+                    sub["attn"],
+                    L.rms_norm(x, sub["ln_attn"]["scale"], cfg.norm_eps),
+                    cfg,
+                    local=cfg.is_local_layer(j),
+                    positions=positions,
+                    use_flash=use_flash,
+                )
+                if "ln_attn_post" in sub:
+                    h = L.rms_norm(h, sub["ln_attn_post"]["scale"], cfg.norm_eps)
+                x = x + h
+                states[f"sub{j}"] = attn_lib.cache_from_prefill(
+                    kv, cfg, max_len, cfg.is_local_layer(j)
+                )
+                if "cross" in sub and memory is not None:
+                    mem_kv = attn_lib.encode_memory_kv(sub["cross"], memory, cfg)
+                    states[f"mem{j}"] = mem_kv
+                    h = attn_lib.cross_attention(
+                        sub["cross"],
+                        L.rms_norm(x, sub["ln_cross"]["scale"], cfg.norm_eps),
+                        mem_kv,
+                        cfg,
+                    )
+                    x = x + h
+            elif "mamba" in sub:
+                h, st = mamba_lib.state_from_prefill(
+                    sub["mamba"],
+                    L.rms_norm(x, sub["ln_mamba"]["scale"], cfg.norm_eps),
+                    cfg,
+                )
+                x = x + h
+                states[f"sub{j}"] = st
+            if "moe" in sub:
+                h, _ = moe_lib.moe_ffn(
+                    sub["moe"], L.rms_norm(x, sub["ln_ffn"]["scale"], cfg.norm_eps), cfg
+                )
+                if "ln_ffn_post" in sub:
+                    h = L.rms_norm(h, sub["ln_ffn_post"]["scale"], cfg.norm_eps)
+                x = x + h
+            elif "mlp" in sub:
+                h = L.mlp(
+                    sub["mlp"], L.rms_norm(x, sub["ln_ffn"]["scale"], cfg.norm_eps), cfg
+                )
+                if "ln_ffn_post" in sub:
+                    h = L.rms_norm(h, sub["ln_ffn_post"]["scale"], cfg.norm_eps)
+                x = x + h
+        return x, states
+
+    x, states = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    last = x[:, -1, :]
+    logits = L.unembed({"table": head_table(params)}, last, cfg)
+
+    layers = {k: v for k, v in states.items() if not k.startswith("mem")}
+    cache: PyTree = {"layers": layers, "pos": jnp.full((), S, jnp.int32)}
+    if cfg.is_encoder_decoder:
+        cache["memory_kv"] = {k[3:]: v for k, v in states.items() if k.startswith("mem")}
+    return logits, cache
+
+
+def decode_step(
+    params: Params,
+    token: jax.Array,
+    cache: PyTree,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, PyTree]:
+    """One decode step.  token: (B, 1) int32.  Returns (logits (B,V), new cache)."""
+    P = layer_period(cfg)
+    pos = cache["pos"]
+    x = L.embed(params["embed"], token, cfg)
+
+    xs = (params["blocks"], cache["layers"])
+    if cfg.is_encoder_decoder:
+        xs = xs + (cache["memory_kv"],)
+
+    def body(x, scanned):
+        group, states = scanned[0], scanned[1]
+        mem_kv = scanned[2] if cfg.is_encoder_decoder else None
+        new_states = {}
+        for j in range(P):
+            sub = group[f"sub{j}"]
+            if "attn" in sub:
+                h, new_kv = attn_lib.attention_decode(
+                    sub["attn"],
+                    L.rms_norm(x, sub["ln_attn"]["scale"], cfg.norm_eps),
+                    states[f"sub{j}"],
+                    pos,
+                    cfg,
+                    local=cfg.is_local_layer(j),
+                )
+                if "ln_attn_post" in sub:
+                    h = L.rms_norm(h, sub["ln_attn_post"]["scale"], cfg.norm_eps)
+                x = x + h
+                new_states[f"sub{j}"] = new_kv
+                if "cross" in sub and mem_kv is not None:
+                    mj = mem_kv[f"{j}"]
+                    h = attn_lib.cross_attention(
+                        sub["cross"],
+                        L.rms_norm(x, sub["ln_cross"]["scale"], cfg.norm_eps),
+                        mj,
+                        cfg,
+                    )
+                    x = x + h
+            elif "mamba" in sub:
+                h, st = mamba_lib.mamba_step(
+                    sub["mamba"],
+                    L.rms_norm(x, sub["ln_mamba"]["scale"], cfg.norm_eps),
+                    states[f"sub{j}"],
+                    cfg,
+                )
+                x = x + h
+                new_states[f"sub{j}"] = st
+            if "moe" in sub:
+                h, _ = moe_lib.moe_ffn(
+                    sub["moe"], L.rms_norm(x, sub["ln_ffn"]["scale"], cfg.norm_eps), cfg
+                )
+                if "ln_ffn_post" in sub:
+                    h = L.rms_norm(h, sub["ln_ffn_post"]["scale"], cfg.norm_eps)
+                x = x + h
+            elif "mlp" in sub:
+                h = L.mlp(
+                    sub["mlp"], L.rms_norm(x, sub["ln_ffn"]["scale"], cfg.norm_eps), cfg
+                )
+                if "ln_ffn_post" in sub:
+                    h = L.rms_norm(h, sub["ln_ffn_post"]["scale"], cfg.norm_eps)
+                x = x + h
+        return x, new_states
+
+    x, new_layers = jax.lax.scan(body, x, xs)
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = L.unembed({"table": head_table(params)}, x[:, -1, :], cfg)
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,177 @@
+"""Sort-based capacity MoE (Megablocks-style dispatch, no ragged ops).
+
+Tokens are routed top-k, sorted by expert, packed into a fixed-capacity
+(E, C, d) buffer (overflow dropped, standard capacity-factor semantics), run
+through batched expert FFNs, and scattered back with gate weights.  Under
+GSPMD the (E, C, d) buffer resharding is what becomes the expert-parallel
+all-to-all on the mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+DEFAULT_CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "wi": dense_init(ks[1], (E, d, f), in_axis=1, dtype=dt),
+        "wo": dense_init(ks[2], (E, f, d), in_axis=1, dtype=dt),
+    }
+    if cfg.mlp_glu:
+        p["wg"] = dense_init(ks[3], (E, d, f), in_axis=1, dtype=dt)
+    if m.num_shared_experts:
+        fs = m.num_shared_experts * f
+        p["shared_wi"] = dense_init(ks[4], (d, fs), dtype=dt)
+        p["shared_wo"] = dense_init(ks[5], (fs, d), dtype=dt)
+        if cfg.mlp_glu:
+            p["shared_wg"] = dense_init(ks[3], (d, fs), dtype=dt)
+    return p
+
+
+def _expert_capacity(tokens: int, cfg: ModelConfig, capacity_factor: float) -> int:
+    m = cfg.moe
+    if capacity_factor <= 0:            # exact dispatch: no dropping possible
+        return tokens * m.num_experts_per_tok
+    c = int(tokens * m.num_experts_per_tok * capacity_factor / m.num_experts)
+    c = max(8, -(-c // 8) * 8)          # round up to a multiple of 8
+    return min(c, tokens)
+
+
+def moe_ffn(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    capacity_factor: float = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux load-balance loss scalar).
+
+    With the ``moe_local_dispatch`` perf flag, routing/sort/scatter run
+    per-data-shard inside ``shard_map`` (model axes stay auto/GSPMD): the
+    token sort never becomes a global distributed sort, which is the
+    dominant collective in the GSPMD-naive dispatch (§Perf, moonshot cell).
+    """
+    from repro.models.perf import FLAGS
+
+    if FLAGS.get("moe_local_dispatch") and FLAGS["mesh"] is not None:
+        return _moe_ffn_local(params, x, cfg, capacity_factor)
+    return _moe_ffn_dense(params, x, cfg, capacity_factor)
+
+
+def _moe_ffn_local(params, x, cfg, capacity_factor):
+    """GShard-style grouped dispatch: split tokens into data-shard-aligned
+    groups and vmap the sort/scatter over groups.  Each group's argsort,
+    position-arithmetic and capacity buffer stay shard-local under GSPMD —
+    the routing step never becomes a global distributed sort (§Perf H10)."""
+    import numpy as np
+
+    from repro.models.perf import FLAGS, constraint
+
+    mesh = FLAGS["mesh"]
+    ba = tuple(FLAGS["batch_axes"])
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    G = int(np.prod([sizes.get(a, 1) for a in ba]))
+    B, S, d = x.shape
+    T = B * S
+    if G <= 1 or T % G or B % G:
+        return _moe_ffn_dense(params, x, cfg, capacity_factor)
+
+    xg = x.reshape(G, B // G * S, d)
+    xg = constraint((ba, None, None))(xg)
+
+    def one_group(xl):
+        y, aux = _moe_ffn_dense(params, xl[None], cfg, capacity_factor)
+        return y[0], aux
+
+    yg, aux = jax.vmap(one_group)(xg)
+    yg = constraint((ba, None, None))(yg)
+    return yg.reshape(B, S, d), jnp.mean(aux)
+
+
+def _moe_ffn_dense(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    capacity_factor: float = None,
+) -> Tuple[jax.Array, jax.Array]:
+    m = cfg.moe
+    if capacity_factor is None:
+        capacity_factor = m.capacity_factor
+    B, S, d = x.shape
+    E, K = m.num_experts, m.num_experts_per_tok
+    T = B * S
+    xf = x.reshape(T, d)
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = xf.astype(jnp.float32) @ params["router"]            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)               # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load-balancing auxiliary loss (Switch-style) ------------------------
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    assign = jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(assign, axis=0)
+    aux = m.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    A = T * K
+    flat_eid = expert_idx.reshape(A)
+    flat_gate = gate_vals.reshape(A)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_eid)                                 # stable
+    s_eid, s_gate, s_tok = flat_eid[order], flat_gate[order], flat_tok[order]
+    group_start = jnp.searchsorted(s_eid, jnp.arange(E))
+    pos_in_expert = jnp.arange(A) - group_start[s_eid]
+
+    C = _expert_capacity(T, cfg, capacity_factor)
+    keep = pos_in_expert < C
+
+    buf = jnp.zeros((E, C, d), x.dtype)
+    vals = jnp.where(keep[:, None], xf[s_tok], 0)
+    buf = buf.at[s_eid, jnp.where(keep, pos_in_expert, C)].set(vals, mode="drop")
+
+    from repro.models.perf import FLAGS, constraint
+    if FLAGS["moe_ep"] and FLAGS["mesh"] is not None:
+        # expert-parallel dispatch: resharding the capacity buffer onto the
+        # model axis makes GSPMD emit an all-to-all instead of replicating
+        # the buffer (§Perf H4)
+        buf = constraint(("model", None, None))(buf)
+
+    # ---- batched expert FFN --------------------------------------------------
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    if cfg.mlp_glu:
+        h = act(jnp.einsum("ecd,edf->ecf", buf, params["wg"])) * h
+    else:
+        h = act(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+
+    # ---- combine -------------------------------------------------------------
+    gathered = out_buf[s_eid, jnp.clip(pos_in_expert, 0, C - 1)]
+    gathered = gathered * (s_gate * keep).astype(gathered.dtype)[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[s_tok].add(gathered)
+
+    # ---- shared experts (always-on, Moonlight/DeepSeek style) ----------------
+    if "shared_wi" in params:
+        hs = xf @ params["shared_wi"]
+        if cfg.mlp_glu:
+            hs = act(xf @ params["shared_wg"]) * hs
+        else:
+            hs = act(hs)
+        y = y + hs @ params["shared_wo"]
+
+    return y.reshape(B, S, d), aux

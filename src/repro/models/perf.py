@@ -1,0 +1,135 @@
+"""Performance-iteration flags (§Perf hillclimbs, EXPERIMENTS.md).
+
+Each flag is one hypothesis->change from the roofline loop, OFF by default so
+the paper-faithful/GSPMD-naive baseline stays measurable:
+
+``loss_sharding``   keep the token dimension of the chunked cross-entropy
+                    sharded over the batch axes (with_sharding_constraint),
+                    instead of letting GSPMD replicate each chunk and
+                    all-reduce f32 logits (observed 40 GB/chip on
+                    qwen/train_4k).
+``bf16_grad_accum`` accumulate/reduce gradients in bf16 instead of f32 —
+                    halves gradient-sync wire bytes; fp32 master weights in
+                    the optimizer keep the update math exact.
+``norm_bf16_bwd``   custom-vjp RMSNorm that emits bf16 input cotangents, so
+                    backward TP all-reduces run at bf16 width instead of the
+                    f32 internal dtype (observed 3x f32[B,S,d] tuples per
+                    layer).
+``grad_zero1``      constrain gradients to the zero-1 (data-sharded) layout so
+                    GSPMD reduce-scatters instead of all-reducing, matching
+                    the sharded optimizer state.
+``moe_ep``          constrain the MoE dispatch buffer to expert-parallel
+                    sharding so dispatch becomes an all-to-all instead of
+                    gather+replicate.
+
+Flags are process-global (set before tracing).  ``mesh``/``batch_axes`` give
+the constraint context.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+FLAGS = {
+    "loss_sharding": False,
+    "bf16_grad_accum": False,
+    "norm_bf16_bwd": False,
+    "grad_zero1": False,
+    "moe_ep": False,
+    "attn_sharding": False,   # pin q/k/v + attn output layouts (§Perf H5)
+    "bf16_cotangents": False,  # dtype barriers at attn boundaries (§Perf H6)
+    "opt_barriers": False,     # stop f32 convert-hoist through psums (§Perf H7)
+    "act_sharding": False,     # pin residual stream to P(batch,None,None) (§Perf H8)
+    "moe_local_dispatch": False,  # per-data-shard MoE routing via shard_map (§Perf H10)
+    "mesh": None,
+    "batch_axes": ("data",),
+}
+
+
+def residual_constraint(x):
+    """§Perf H8: pin the (B, S, d) residual stream at layer boundaries.
+
+    With FSDP weights (d over 'data', heads/ffn over 'model') GSPMD invents
+    mixed activation shardings and reshards per sublayer (observed: W=8
+    all-to-alls + W=2 all-gathers per layer per microbatch on llama3-405b).
+    Pinning the boundary layout to pure batch sharding makes every sublayer a
+    clean TP block: all-gather weights in, psum activations out.
+    """
+    if not FLAGS["act_sharding"] or FLAGS["mesh"] is None:
+        return x
+    if FLAGS["act_sharding"] == "sp":
+        # Megatron-style sequence parallelism: shard S over 'model' at the
+        # boundary; GSPMD then emits all-gather(S) into each TP sublayer and
+        # reduce-scatter(S) out — half the wire of two full psums (§Perf H9)
+        return constraint((FLAGS["batch_axes"], "model", None))(x)
+    return constraint((FLAGS["batch_axes"], None, None))(x)
+
+
+def sublayer_barrier(x):
+    """§Perf H7: XLA's algebraic simplifier rewrites convert(all-reduce(bf16))
+    into all-reduce(convert(f32)) — doubling TP wire bytes because the next
+    consumer is the fp32 RMSNorm.  An optimization_barrier directly after the
+    TP-reduced einsum pins the all-reduce to the bf16 tensor."""
+    import jax
+
+    if not FLAGS["opt_barriers"]:
+        return x
+    return jax.lax.optimization_barrier(x)
+
+
+def set_flags(**kw) -> None:
+    for k, v in kw.items():
+        if k not in FLAGS:
+            raise KeyError(k)
+        FLAGS[k] = v
+
+
+@contextmanager
+def perf_flags(**kw):
+    old = {k: FLAGS[k] for k in kw}
+    set_flags(**kw)
+    try:
+        yield
+    finally:
+        FLAGS.update(old)
+
+
+def cast_bwd(x):
+    """Identity forward; backward casts the cotangent to the primal dtype.
+
+    §Perf H6: cotangents widen to f32 through the f32-softmax boundary (f32
+    grad x bf16 primal promotes), and the f32 then rides the backward TP
+    all-reduces, doubling their wire bytes.  A dtype barrier at the q/k/v and
+    attention-output boundaries keeps backward collectives at bf16 — the fp32
+    softmax math itself is untouched.
+    """
+    import jax
+
+    if not FLAGS["bf16_cotangents"]:
+        return x
+    dt = x.dtype   # captured statically in the closure (not a residual)
+
+    @jax.custom_vjp
+    def _barrier(y):
+        return y
+
+    def _fwd(y):
+        return y, None
+
+    def _bwd(_, g):
+        return (g.astype(dt),)
+
+    _barrier.defvjp(_fwd, _bwd)
+    return _barrier(x)
+
+
+def constraint(spec_args: Tuple):
+    """with_sharding_constraint helper; no-op when no mesh is configured."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = FLAGS["mesh"]
+    if mesh is None:
+        return lambda x: x
+    sh = NamedSharding(mesh, P(*spec_args))
+    return lambda x: jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,3 @@
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state, lr_at
+
+__all__ = ["OptConfig", "apply_updates", "init_opt_state", "lr_at"]

@@ -1,0 +1,109 @@
+"""AdamW with fp32 master weights — built for zero-1 sharded state.
+
+State layout: ``{"step", "m", "v", "master"}`` where m/v/master mirror the
+param tree in fp32.  The launch layer assigns these leaves zero-1 shardings
+(sharded over data *and* model) so 405B-class optimizer state distributes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params: PyTree) -> Dict[str, PyTree]:
+    f32 = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "master": jax.tree.map(lambda x: x.astype(jnp.float32), params),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def _decay_mask(path: str) -> bool:
+    """Apply weight decay to matrices only (skip norms / biases / scalars)."""
+    for tag in ("scale", "bias", "'bq'", "'bk'", "'bv'", "conv_b", "dt_bias", "'D'"):
+        if tag in path:
+            return False
+    return True
+
+
+def apply_updates(
+    params: PyTree,
+    grads: PyTree,
+    state: Dict[str, PyTree],
+    cfg: OptConfig,
+) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    paths = [jax.tree_util.keystr(kp) for kp, _ in flat_p]
+    leaves_p = [x for _, x in flat_p]
+    leaves_g = jax.tree.leaves(grads)
+    leaves_m = jax.tree.leaves(state["m"])
+    leaves_v = jax.tree.leaves(state["v"])
+    leaves_w = jax.tree.leaves(state["master"])
+
+    new_p, new_m, new_v, new_w = [], [], [], []
+    for path, p, g, m, v, w in zip(paths, leaves_p, leaves_g, leaves_m, leaves_v, leaves_w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * w
+        w = w - lr * upd
+        new_p.append(w.astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+        new_w.append(w)
+
+    unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+    new_state = {"step": step, "m": unf(new_m), "v": unf(new_v), "master": unf(new_w)}
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return unf(new_p), new_state, metrics

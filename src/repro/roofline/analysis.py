@@ -1,0 +1,154 @@
+"""Roofline accounting from the compiled dry-run artifact (deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step-per-chip:
+
+    compute    = HLO_FLOPs            / peak_FLOP/s          (197e12, bf16 v5e)
+    memory     = HLO_bytes_accessed   / HBM_bw               (819e9  B/s)
+    collective = wire_bytes_per_chip  / ICI_link_bw          (50e9   B/s; DCN
+                                                              12.5e9 for pod-
+                                                              spanning groups)
+
+``cost_analysis()`` on an SPMD-partitioned executable reports the per-device
+program, so flops/bytes are already per-chip.  Collective bytes are NOT in
+cost_analysis: we parse the optimised HLO and convert each collective's
+result shape into per-chip wire bytes using ring-algorithm costs:
+
+    all-reduce       2 (W-1)/W x result
+    all-gather         (W-1)/W x result          (result = gathered buffer)
+    reduce-scatter     (W-1)   x result          (result = 1/W shard)
+    all-to-all         (W-1)/W x result
+    collective-permute           result
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+HW = dict(
+    chip="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    dcn_bw=12.5e9,
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes_from_hlo(
+    hlo_text: str, total_devices: int, pod_group_size: Optional[int] = None
+) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind + ici/dcn split.
+
+    ``pod_group_size``: group sizes equal to the pod count are attributed to
+    the DCN (cross-pod) term.
+    """
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        rb = _shape_bytes(shape_str)
+        W = _group_size(line, total_devices)
+        if W <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2 * (W - 1) / W * rb
+        elif op == "all-gather":
+            wire = (W - 1) / W * rb
+        elif op == "reduce-scatter":
+            wire = (W - 1) * rb
+        elif op == "all-to-all":
+            wire = (W - 1) / W * rb
+        else:  # collective-permute
+            wire = rb
+        out[op] += wire
+        link = "dcn" if (pod_group_size and W == pod_group_size) else "ici"
+        out[link] += wire
+    out["total"] = sum(v for k, v in out.items() if k not in ("ici", "dcn", "total"))
+    return dict(out)
+
+
+def model_flops(param_count: int, tokens: int, kind: str,
+                active_param_count: Optional[int] = None) -> float:
+    """6·N·D for training, 2·N·D for inference (N = active params for MoE)."""
+    n = active_param_count or param_count
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+def roofline_terms(
+    cost: Dict[str, float],
+    coll: Dict[str, float],
+    chips: int,
+    model_fl: float,
+) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / HW["peak_flops_bf16"]
+    memory_s = bytes_accessed / HW["hbm_bw"]
+    ici_s = coll.get("ici", 0.0) / HW["ici_bw"]
+    dcn_s = coll.get("dcn", 0.0) / HW["dcn_bw"]
+    collective_s = ici_s + dcn_s
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "collective_ici_s": ici_s,
+        "collective_dcn_s": dcn_s,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_accessed,
+        "wire_bytes_per_chip": coll.get("total", 0.0),
+        "model_flops_per_chip": model_fl / chips,
+        "useful_flops_ratio": (model_fl / chips) / flops if flops else 0.0,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["step_lower_bound_s"] = max(
+        terms["compute_s"], terms["memory_s"], terms["collective_s"], 1e-12
+    )
+    # fraction of the step bound that is *useful* model math — the MFU this
+    # cell would achieve if it ran exactly at its binding roofline term
+    terms["mfu_at_bound"] = (
+        terms["model_flops_per_chip"] / HW["peak_flops_bf16"]
+    ) / terms["step_lower_bound_s"]
+    # how close the compiled program is to being compute-bound
+    terms["roofline_fraction"] = terms["compute_s"] / terms["step_lower_bound_s"]
+    return terms

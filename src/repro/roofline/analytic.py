@@ -1,0 +1,125 @@
+"""Analytic per-cell FLOP / HBM-byte models (documented napkin math).
+
+Why analytic: XLA's cost analysis counts while-loop bodies once (verified in
+tests), so for scan-over-layers programs it undercounts by ~num_layers x.
+Collectives are recovered trip-aware from the HLO (hlo_parse.py); for compute
+and HBM traffic we use explicit formulas — standard practice (the 6ND family)
+extended with attention's quadratic term, remat recompute, optimizer traffic
+and KV-cache reads.  EXPERIMENTS.md §Roofline states the formulas; the raw
+(undercounting) cost_analysis numbers stay in the per-cell JSON for
+comparison.
+
+Conventions: per-chip, per-step, bf16 weights/activations, fp32 optimizer.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.attention_free:
+        return 0
+    if cfg.attn_layer_period:
+        return cfg.num_layers // cfg.attn_layer_period
+    return cfg.num_layers + cfg.encoder_layers
+
+
+def _active_params(cfg: ModelConfig) -> int:
+    n = cfg.param_count()
+    if cfg.moe is None:
+        return n
+    m = cfg.moe
+    moe_layers = cfg.num_layers // m.layer_period
+    expert_params = moe_layers * m.num_experts * (3 if cfg.mlp_glu else 2) \
+        * cfg.d_model * m.d_ff_expert
+    active_expert = expert_params * (m.num_experts_per_tok / m.num_experts)
+    return int(n - expert_params + active_expert)
+
+
+def attention_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Forward score+PV flops (causal halves the full S^2)."""
+    if cfg.attention_free:
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    la = _attn_layers(cfg)
+    if shape.is_decode:
+        # one token attends to the whole cache (window-limited for SWA)
+        kv = min(cfg.sliding_window or S, S)
+        return 4.0 * B * kv * cfg.num_heads * hd * la
+    per_layer = 2.0 * B * S * S * cfg.num_heads * hd  # qk^T + pv, causal 1/2
+    window = cfg.sliding_window
+    if window and 0 < window < S:
+        local = 2.0 * B * S * window * cfg.num_heads * hd * 2  # full window band
+        if cfg.local_global_period:
+            n_local = la // 2
+            return per_layer * (la - n_local) + local * n_local
+        return local * la
+    return per_layer * la
+
+
+def cell_flops_per_chip(cfg: ModelConfig, shape: ShapeConfig, chips: int) -> Dict[str, float]:
+    B, S = shape.global_batch, shape.seq_len
+    n_active = _active_params(cfg)
+    if shape.kind == "train":
+        tokens = B * S
+        matmul = 2.0 * n_active * tokens
+        attn = attention_flops(cfg, shape)
+        fwd = matmul + attn
+        total = 4.0 * fwd               # fwd + bwd(2x) + remat fwd(1x)
+    elif shape.kind == "prefill":
+        tokens = B * S
+        total = 2.0 * n_active * tokens + attention_flops(cfg, shape)
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * B + attention_flops(cfg, shape)
+    return {
+        "model_flops": (2.0 if shape.kind != "train" else 6.0) * n_active *
+                       (B if shape.is_decode else B * S),
+        "hlo_flops_est": total,
+        "per_chip": total / chips,
+        "active_params": float(n_active),
+    }
+
+
+def cell_hbm_bytes_per_chip(
+    cfg: ModelConfig, shape: ShapeConfig, chips: int, grad_accum: int = 1
+) -> Dict[str, float]:
+    """HBM traffic model (bf16=2B, fp32=4B), per chip per step.
+
+    train:  weights 3 passes per microbatch (fwd, remat-fwd, bwd) +
+            grads f32 read/write + optimizer (m,v,master r/w + param write) +
+            saved activations (layer inputs) write+read.
+    prefill: weights once + activations once + cache write.
+    decode:  weights once (batch amortises) + full KV/state read + tiny IO.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    n = cfg.param_count()
+    n_active = _active_params(cfg)
+    d = cfg.d_model
+    L = cfg.num_layers + cfg.encoder_layers
+    w_bytes = 2.0 * n
+    act_layer = 2.0 * B * S * d            # one bf16 (B,S,d) tensor
+    if shape.kind == "train":
+        weights = 3.0 * grad_accum * 2.0 * n_active   # active path touched
+        grads = (4.0 + 4.0) * n                       # f32 write+read
+        optim = 5.0 * 4.0 * n                         # m,v,master r/w-ish + p
+        acts = 2.0 * 2.0 * L * act_layer              # save+load layer inputs
+        intra = 8.0 * L * act_layer * grad_accum / grad_accum  # fused interm.
+        total = weights + grads + optim + acts + intra
+    elif shape.kind == "prefill":
+        kvb = 2.0 * 2.0 * B * S * cfg.num_kv_heads * cfg.resolved_head_dim \
+            * _attn_layers(cfg)
+        total = 2.0 * n_active + 6.0 * L * act_layer + kvb
+    else:
+        kv = min(cfg.sliding_window or S, S)
+        kvb = 2.0 * 2.0 * B * kv * cfg.num_kv_heads * cfg.resolved_head_dim \
+            * _attn_layers(cfg)
+        ssmb = 0.0
+        if cfg.ssm is not None:
+            s_layers = (cfg.num_layers - _attn_layers(cfg)) if not cfg.attention_free \
+                else cfg.num_layers
+            ssmb = 2.0 * 4.0 * B * cfg.ssm.expand * d * cfg.ssm.state_size * s_layers
+        total = 2.0 * n_active + kvb + ssmb
+    return {"per_chip": total / chips, "weights_bytes": w_bytes}

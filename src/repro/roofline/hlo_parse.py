@@ -1,0 +1,140 @@
+"""Trip-count-aware HLO accounting.
+
+XLA's ``compiled.cost_analysis()`` (and any naive text scrape) counts a
+``while`` body ONCE — but our programs put almost everything inside scans
+(layer-group scan x G, grad-accumulation scan x ga, attention q-chunk scan,
+loss token-chunk scan).  FSDP all-gathers and TP all-reduces live *inside*
+the layer scan, so collective bytes would be undercounted by ~Gx.
+
+This parser:
+  1. splits the optimised HLO text into computations,
+  2. finds each ``while``'s body/condition regions and extracts the trip
+     count from the condition's comparison constant,
+  3. propagates nested trip multipliers from ENTRY down,
+  4. sums collective wire bytes x multiplier (ring-cost conversions as in
+     ``analysis.collective_bytes_from_hlo``).
+
+Verified against hand-built scan programs in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline.analysis import _COLL_RE, _group_size, _shape_bytes
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)", re.DOTALL
+)
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w.\-]+)")
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> list of its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry_alias = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line) or _COMP_HDR.match(stripped)
+            if m and (line.rstrip().endswith("{") or stripped.endswith("{")):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    entry_alias = cur
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    if entry_alias is not None:
+        comps["__entry__"] = comps[entry_alias]
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = [int(m.group(1)) for l in cond_lines for m in _CONST_RE.finditer(l)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo: str) -> Tuple[Dict[str, List[str]], Dict[str, float]]:
+    comps = split_computations(hlo)
+    entry = "__entry__"
+    mult: Dict[str, float] = defaultdict(float)
+    if entry not in comps:
+        return comps, {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    # iterate to fixpoint over the call graph (while bodies, calls, fusions)
+    for _ in range(32):
+        changed = False
+        for name, lines in comps.items():
+            base = mult.get(name, 0.0)
+            if base <= 0:
+                continue
+            for l in lines:
+                mw = _WHILE_RE.search(l)
+                if mw:
+                    cond, body = mw.group(1), mw.group(2)
+                    trips = _trip_count(comps.get(cond, []))
+                    for target in (body, cond):
+                        want = base * trips
+                        if mult.get(target, 0.0) < want:
+                            mult[target] = want
+                            changed = True
+                    continue
+                mc = _CALL_RE.search(l)
+                if mc:
+                    target = mc.group(1)
+                    if mult.get(target, 0.0) < base:
+                        mult[target] = base
+                        changed = True
+        if not changed:
+            break
+    out = {name: mult.get(name, 1.0) for name in comps}
+    return comps, out
+
+
+def collective_bytes_trip_aware(
+    hlo: str, total_devices: int, pod_group_size: Optional[int] = None
+) -> Dict[str, float]:
+    """Per-chip wire bytes by kind, with while-loop trip multipliers."""
+    comps, mult = computation_multipliers(hlo)
+    out: Dict[str, float] = defaultdict(float)
+    seen_entry = set()
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        k = mult.get(name, 1.0)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            shape_str, op = m.group(1), m.group(2)
+            rb = _shape_bytes(shape_str)
+            # XLA *CPU* promotes bf16 all-reduces to f32 (to_apply=..._promoted)
+            # because the CPU backend lacks bf16 reduction math; the TPU target
+            # reduces bf16 natively, so count promoted reduces at bf16 width.
+            if "_promoted" in line:
+                rb *= 0.5
+            W = _group_size(line, total_devices)
+            if W <= 1:
+                continue
+            if op == "all-reduce":
+                wire = 2 * (W - 1) / W * rb
+            elif op == "all-gather":
+                wire = (W - 1) / W * rb
+            elif op == "reduce-scatter":
+                wire = (W - 1) * rb
+            elif op == "all-to-all":
+                wire = (W - 1) / W * rb
+            else:
+                wire = rb
+            out[op] += wire * k
+            link = "dcn" if (pod_group_size and W == pod_group_size) else "ici"
+            out[link] += wire * k
+    out["total"] = sum(v for kk, v in out.items() if kk not in ("ici", "dcn", "total"))
+    return dict(out)

@@ -1,0 +1,110 @@
+"""Batched serving engine: slot-based continuous batching over fixed shapes.
+
+XLA wants static shapes, so the engine maintains ``slots`` concurrent decode
+lanes over a shared (B, max_len) KV cache.  Requests are admitted into free
+slots; each engine step decodes one token for every active slot; finished
+slots are recycled without stopping the batch (continuous batching at the
+step granularity — the vLLM idea restricted to static shapes).
+
+Single-slot-length limitation: all slots share one ``pos`` counter (the
+model-level cache is position-synchronised), so the engine runs *waves*:
+requests admitted into a wave start together at the wave's base position with
+left-padding.  This keeps the step function identical to the dry-run
+``serve_step`` the roofline measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    slots: int = 8                     # concurrent sequences (batch)
+    max_len: int = 512
+    temperature: float = 0.0           # 0 => greedy
+    seed: int = 0
+    eos_id: int = -1                   # -1 => run to max_new
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new: int = 32
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    latency_s: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: PyTree, scfg: ServeConfig):
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, b, cfg, max_len=scfg.max_len)
+        )
+        self._step = jax.jit(lambda p, t, c: M.decode_step(p, t, c, cfg))
+        self._rng = np.random.default_rng(scfg.seed)
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.scfg.temperature <= 0:
+            return logits.argmax(-1)
+        z = logits / self.scfg.temperature
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([self._rng.choice(len(r), p=r) for r in p])
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve all requests in slot-waves; returns the same list, filled."""
+        scfg = self.scfg
+        pending = list(requests)
+        while pending:
+            wave = pending[: scfg.slots]
+            pending = pending[len(wave):]
+            self._run_wave(wave)
+        return requests
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        scfg, cfg = self.scfg, self.cfg
+        B = scfg.slots
+        t0 = time.perf_counter()
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, plen - len(r.prompt):] = r.prompt       # left pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jnp.zeros((B, plen, cfg.d_model), jnp.bfloat16)
+        logits, cache = self._prefill(self.params, batch)
+        logits = np.asarray(logits, np.float32)
+
+        max_new = max(r.max_new for r in wave)
+        active = np.array([not r.done for r in wave] + [False] * (B - len(wave)))
+        for step_i in range(max_new):
+            nxt = self._sample(logits)
+            for i, r in enumerate(wave):
+                if active[i] and len(r.out) < r.max_new:
+                    r.out.append(int(nxt[i]))
+                    if int(nxt[i]) == scfg.eos_id or len(r.out) >= r.max_new:
+                        active[i] = False
+                        r.done = True
+            if not active.any():
+                break
+            logits_j, cache = self._step(
+                self.params, jnp.asarray(nxt[:, None].astype(np.int32)), cache
+            )
+            logits = np.asarray(logits_j, np.float32)
+        dt = time.perf_counter() - t0
+        for r in wave:
+            r.done = True
+            r.latency_s = dt

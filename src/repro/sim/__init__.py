@@ -1,0 +1,29 @@
+"""Trace-driven simulator of distributed training communication (§5-§9)."""
+from repro.sim.events import Sim
+from repro.sim.strategies import (
+    MECHANISMS,
+    SimResult,
+    simulate,
+    simulate_butterfly,
+    simulate_ps,
+    simulate_ring,
+    speedup_table,
+)
+from repro.sim.traces import (
+    INCEPTION_V3,
+    PAPER_CNNS,
+    RESNET_101,
+    RESNET_200,
+    VGG16,
+    LayerTrace,
+    ModelTrace,
+    toy_3op,
+    trace_from_cost_analysis,
+)
+
+__all__ = [
+    "Sim", "MECHANISMS", "SimResult", "simulate", "simulate_butterfly",
+    "simulate_ps", "simulate_ring", "speedup_table", "INCEPTION_V3",
+    "PAPER_CNNS", "RESNET_101", "RESNET_200", "VGG16", "LayerTrace",
+    "ModelTrace", "toy_3op", "trace_from_cost_analysis",
+]

@@ -1,0 +1,123 @@
+"""Discrete-event engine for the trace-driven training simulator (§5).
+
+The model is a dependency DAG of *tasks*.  A task occupies one or more
+*resources* (a worker's GPU, a NIC egress/ingress) for ``duration`` seconds,
+and becomes ready when all of its dependencies have completed (plus an
+optional offset — used by the in-network-aggregation cut-through model).
+
+Resources are fluid full-duplex links: a transfer reserves the sender's
+egress and the receiver's ingress for ``bits / bandwidth`` seconds, starting
+at ``max(ready, free(resources...))``.  Tasks are admitted in ready-time
+order (FIFO per resource), which reproduces the incast serialisation at a
+parameter server's NIC that drives the paper's §4/§8 analysis.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import defaultdict
+from typing import Dict, Hashable, Iterable, List, Optional, Tuple
+
+Resource = Hashable
+TaskId = Hashable
+
+
+class Sim:
+    def __init__(self) -> None:
+        self._free: Dict[Resource, float] = defaultdict(float)
+        self._deps_left: Dict[TaskId, int] = {}
+        self._dep_ready: Dict[TaskId, float] = defaultdict(float)
+        self._children: Dict[TaskId, List[TaskId]] = defaultdict(list)
+        self._spec: Dict[TaskId, Tuple[Tuple[Resource, ...], float, float]] = {}
+        self.end_time: Dict[TaskId, float] = {}
+        self.start_time: Dict[TaskId, float] = {}
+        self._heap: List[Tuple[float, int, TaskId]] = []
+        self._seq = itertools.count()
+
+    # ----------------------------------------------------------------- build
+    def add(
+        self,
+        tid: TaskId,
+        *,
+        deps: Iterable[TaskId] = (),
+        resources: Iterable[Resource] = (),
+        duration: float = 0.0,
+        ready_offset: float = 0.0,
+        at: Optional[float] = None,
+    ) -> TaskId:
+        """Add a task.  ``at`` forces an absolute earliest-ready time."""
+        if tid in self._spec:
+            raise ValueError(f"duplicate task {tid!r}")
+        deps = list(deps)
+        self._spec[tid] = (tuple(resources), float(duration), float(ready_offset))
+        self._deps_left[tid] = len(deps)
+        if at is not None:
+            self._dep_ready[tid] = float(at)
+        for d in deps:
+            if d in self.end_time:
+                self._deps_left[tid] -= 1
+                self._dep_ready[tid] = max(self._dep_ready[tid], self.end_time[d])
+            else:
+                self._children[d].append(tid)
+        if self._deps_left[tid] == 0:
+            self._push(tid)
+        return tid
+
+    def _push(self, tid: TaskId) -> None:
+        _, _, offset = self._spec[tid]
+        ready = self._dep_ready[tid] + offset
+        heapq.heappush(self._heap, (ready, next(self._seq), tid))
+
+    # ------------------------------------------------------------------- run
+    def run(self) -> float:
+        """Execute all tasks; returns the makespan."""
+        makespan = 0.0
+        while self._heap:
+            ready, _, tid = heapq.heappop(self._heap)
+            resources, duration, _ = self._spec[tid]
+            start = ready
+            for r in resources:
+                start = max(start, self._free[r])
+            end = start + duration
+            for r in resources:
+                self._free[r] = end
+            self.start_time[tid] = start
+            self.end_time[tid] = end
+            makespan = max(makespan, end)
+            for c in self._children.pop(tid, ()):  # release dependents
+                self._dep_ready[c] = max(self._dep_ready[c], end)
+                self._deps_left[c] -= 1
+                if self._deps_left[c] == 0:
+                    self._push(c)
+        undone = [t for t, n in self._deps_left.items() if n > 0]
+        if undone:
+            raise RuntimeError(f"deadlock: {len(undone)} tasks never ready, e.g. {undone[:5]}")
+        return makespan
+
+    # ----------------------------------------------------------------- query
+    def t(self, tid: TaskId) -> float:
+        return self.end_time[tid]
+
+    def max_end(self, tids: Iterable[TaskId]) -> float:
+        return max(self.end_time[t] for t in tids)
+
+
+# canonical resource names ----------------------------------------------------
+def gpu(w: int) -> str:
+    return f"gpu/{w}"
+
+
+def egress(node: str) -> str:
+    return f"eg/{node}"
+
+
+def ingress(node: str) -> str:
+    return f"in/{node}"
+
+
+def worker(w: int) -> str:
+    return f"w{w}"
+
+
+def ps(p: int) -> str:
+    return f"ps{p}"

@@ -1,0 +1,479 @@
+"""Task-graph builders for each mechanism the paper studies (§3, §8, §9).
+
+Every ``simulate_*`` function unrolls ``iterations`` training iterations of
+the given trace into the event engine and returns per-iteration markers, from
+which ``iteration_time`` computes the steady-state time the paper reports.
+
+Mechanisms:
+  * parameter server (baseline), +multicast, +in-network aggregation, +both
+    — with round-robin vs block distribution (§9.4), round-robin vs
+    size-balanced vs split parameter assignment (§9.1), optional global
+    barrier removal (§9.3);
+  * ring-reduce, with/without parameter messaging (§9.2) and with multicast
+    second ring (§8.4);
+  * butterfly mixing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.sim import events as E
+from repro.sim.traces import ModelTrace
+
+
+@dataclasses.dataclass
+class SimResult:
+    markers: List[float]               # per-iteration completion milestones
+    makespan: float
+    sim: E.Sim
+    meta: Dict
+
+    @property
+    def iteration_time(self) -> float:
+        """Steady-state iteration time: mean gap between iteration markers
+        (the paper's (iter3 - iter1)/2 measurement generalised)."""
+        m = self.markers
+        if len(m) == 1:
+            return m[0]
+        return (m[-1] - m[0]) / (len(m) - 1)
+
+
+# ---------------------------------------------------------------------------
+# shared compute pipeline: forward pass + backprop chains for one worker
+# ---------------------------------------------------------------------------
+def _fwd_chain(sim, trace, w, it, recv_dep, extra_deps=()):
+    """Forward layers; layer l waits for its params (recv_dep(l)) + fwd l-1."""
+    n = len(trace.layers)
+    scale = trace.worker_scale(w)
+    prev = None
+    for l in range(n):
+        deps = list(extra_deps)
+        r = recv_dep(l)
+        if r is not None:
+            deps.append(r)
+        if prev is not None:
+            deps.append(prev)
+        prev = sim.add(
+            ("fwd", it, w, l),
+            deps=deps,
+            resources=(E.gpu(w),),
+            duration=trace.layers[l].fwd_time * scale,
+        )
+    return prev                         # fwd complete
+
+
+def _bp_chain(sim, trace, w, it, start_dep):
+    """Backprop layers n-1..0; returns dict layer->grad-ready task."""
+    n = len(trace.layers)
+    scale = trace.worker_scale(w)
+    grads = {}
+    prev = start_dep
+    for l in range(n - 1, -1, -1):
+        dur = trace.layers[l].bp_time
+        if l == n - 1:
+            dur += trace.bp_first_extra
+        grads[l] = sim.add(
+            ("bp", it, w, l),
+            deps=[prev] if prev is not None else [],
+            resources=(E.gpu(w),),
+            duration=dur * scale,
+        )
+        prev = grads[l]
+    return grads
+
+
+# ---------------------------------------------------------------------------
+# parameter-server family
+# ---------------------------------------------------------------------------
+def _assign_to_ps(trace: ModelTrace, num_ps: int, policy: str):
+    """Return list of (layer, ps, bits) 'slices'."""
+    sizes = [l.size_bits for l in trace.layers]
+    slices = []
+    if policy == "split":
+        for i, s in enumerate(sizes):
+            for p in range(num_ps):
+                slices.append((i, p, s / num_ps))
+        return slices
+    if policy == "round_robin":
+        owners = [i % num_ps for i in range(len(sizes))]
+    elif policy == "size_balanced":
+        load = [0.0] * num_ps
+        owners = [0] * len(sizes)
+        for i in sorted(range(len(sizes)), key=lambda i: -sizes[i]):
+            p = min(range(num_ps), key=lambda q: load[q])
+            owners[i] = p
+            load[p] += sizes[i]
+    else:
+        raise ValueError(policy)
+    return [(i, owners[i], sizes[i]) for i in range(len(sizes))]
+
+
+def simulate_ps(
+    trace: ModelTrace,
+    workers: int = 32,
+    bandwidth: float = 25e9,
+    num_ps: int = 1,
+    multicast: bool = False,
+    in_network_agg: bool = False,
+    iterations: int = 3,
+    barrier: bool = True,
+    distribution: str = "round_robin",   # or "block" (§9.4)
+    assignment: str = "round_robin",     # or "size_balanced" / "split" (§9.1)
+    half_duplex_ps: bool = False,        # PS NIC shared between rx/tx
+) -> SimResult:
+    """Parameter-server mechanism family.
+
+    ``half_duplex_ps`` models a PS whose NIC (or RPC stack) cannot overlap
+    distribution sends with aggregation receives — this matches the paper's
+    TF1.4-era measurements, where iteration time is essentially
+    dist + agg serialised; the default full-duplex model lets iteration k's
+    aggregation overlap the staggered tail of its own distribution, which is
+    how a modern transport behaves.  Both are reported in EXPERIMENTS.md.
+    """
+    sim = E.Sim()
+    W, bw = workers, bandwidth
+    n = len(trace.layers)
+
+    def ps_egress(p):
+        return E.egress(E.ps(p))
+
+    def ps_ingress(p):
+        return ps_egress(p) if half_duplex_ps else E.ingress(E.ps(p))
+    slices = _assign_to_ps(trace, num_ps, assignment)
+    by_layer: Dict[int, List[Tuple[int, float]]] = {}
+    for i, p, bits in slices:
+        by_layer.setdefault(i, []).append((p, bits))
+    by_ps: Dict[int, List[Tuple[int, float]]] = {}
+    for i, p, bits in slices:
+        by_ps.setdefault(p, []).append((i, bits))
+
+    prev_barrier = None                 # distribution gate, full-barrier mode
+    prev_agg: Dict[int, object] = {}    # per-layer gate, no-barrier mode
+    markers = []
+
+    for it in range(iterations):
+        # ---------------- distribution phase --------------------------------
+        # ordering on each PS egress = insertion order (FIFO at equal ready)
+        recv: Dict[Tuple[int, int], List] = {}
+
+        def dist_deps(layer):
+            if barrier:
+                return [prev_barrier] if prev_barrier is not None else []
+            d = prev_agg.get(layer)
+            return [d] if d is not None else []
+
+        for p in range(num_ps):
+            mine = by_ps.get(p, [])
+            if distribution == "round_robin":
+                order = [(i, bits, w) for (i, bits) in mine for w in range(W)]
+            elif distribution == "block":
+                order = [(i, bits, w) for w in range(W) for (i, bits) in mine]
+            else:
+                raise ValueError(distribution)
+            if multicast:
+                for (i, bits) in mine:
+                    t = sim.add(
+                        ("dist", it, p, i, "mc"),
+                        deps=dist_deps(i),
+                        resources=(ps_egress(p),)
+                        + tuple(E.ingress(E.worker(w)) for w in range(W)),
+                        duration=bits / bw,
+                    )
+                    for w in range(W):
+                        recv.setdefault((w, i), []).append(t)
+            else:
+                for (i, bits, w) in order:
+                    t = sim.add(
+                        ("dist", it, p, i, w),
+                        deps=dist_deps(i),
+                        resources=(ps_egress(p), E.ingress(E.worker(w))),
+                        duration=bits / bw,
+                    )
+                    recv.setdefault((w, i), []).append(t)
+
+        # ---------------- forward + backprop --------------------------------
+        agg_done: Dict[int, List] = {}
+        for w in range(W):
+            def recv_dep(l, w=w):
+                deps = recv[(w, l)]
+                if len(deps) == 1:
+                    return deps[0]
+                return sim.add((("recvall", it, w, l)), deps=deps)
+
+            fwd_done = _fwd_chain(sim, trace, w, it, recv_dep)
+            grads = _bp_chain(sim, trace, w, it, fwd_done)
+
+            # ------------- aggregation sends (pipelined with bp) -------------
+            for l in range(n - 1, -1, -1):
+                for (p, bits) in by_layer[l]:
+                    if in_network_agg:
+                        # worker -> switch leg: occupies worker egress only
+                        t = sim.add(
+                            ("upsend", it, w, l, p),
+                            deps=[grads[l]],
+                            resources=(E.egress(E.worker(w)),),
+                            duration=bits / bw,
+                        )
+                        agg_done.setdefault((l, p), []).append(t)
+                    else:
+                        t = sim.add(
+                            ("up", it, w, l, p),
+                            deps=[grads[l]],
+                            resources=(E.egress(E.worker(w)), ps_ingress(p)),
+                            duration=bits / bw,
+                        )
+                        agg_done.setdefault((l, p), []).append(t)
+
+        # in-network agg: single cut-through aggregated arrival per (l, p)
+        layer_agg: Dict[int, List] = {}
+        for (l, p), sends in sorted(agg_done.items(), key=lambda kv: -kv[0][0]):
+            if in_network_agg:
+                bits = dict(by_layer[l])[p]
+                t = sim.add(
+                    ("agg", it, l, p),
+                    deps=sends,
+                    resources=(ps_ingress(p),),
+                    duration=bits / bw,
+                    ready_offset=-bits / bw,   # switch forwards cut-through
+                )
+                layer_agg.setdefault(l, []).append(t)
+            else:
+                layer_agg.setdefault(l, []).extend(sends)
+
+        # per-layer aggregation-complete gates
+        for l in range(n):
+            prev_agg[l] = sim.add(("aggdone", it, l), deps=layer_agg[l])
+
+        prev_barrier = sim.add(("barrier", it), deps=list(prev_agg.values()))
+        markers.append(("barrier", it) if barrier else ("aggdone", it, 0))
+
+    makespan = sim.run()
+    marks = [sim.t(m) for m in markers]
+    return SimResult(marks, makespan, sim, dict(mechanism="ps", W=W, bw=bw))
+
+
+# ---------------------------------------------------------------------------
+# ring-reduce
+# ---------------------------------------------------------------------------
+def _ring_chunks(trace: ModelTrace, W: int, messaging: bool):
+    """Partition gradients into ring chunks.
+
+    Returns list of (bits, ready_layer) where ready_layer is the layer whose
+    backprop completion makes the chunk sendable.  Chunks are formed over the
+    BACKPROP-ordered byte stream so readiness is monotone (§8.2.1).
+    """
+    n = len(trace.layers)
+    order = list(range(n - 1, -1, -1))          # backprop order
+    if not messaging:
+        return [(trace.layers[l].size_bits, l) for l in order]
+    total = trace.total_bits
+    # byte intervals of each layer along the backprop-ordered stream
+    spans = []
+    cum = 0.0
+    for l in order:
+        s = trace.layers[l].size_bits
+        spans.append((cum, cum + s, l))
+        cum += s
+    chunks = []
+    for c in range(W):
+        lo = total * c / W
+        hi = total * (c + 1) / W
+        deepest = order[-1]
+        for (a, b, l) in spans:                  # last overlapping span wins
+            if a < hi - 1e-9 and b > lo + 1e-9:
+                deepest = l
+        chunks.append((hi - lo, deepest))
+    return chunks
+
+
+def simulate_ring(
+    trace: ModelTrace,
+    workers: int = 32,
+    bandwidth: float = 25e9,
+    messaging: bool = True,
+    multicast_phase2: bool = False,
+    iterations: int = 3,
+) -> SimResult:
+    sim = E.Sim()
+    W, bw = workers, bandwidth
+    n = len(trace.layers)
+    chunks = _ring_chunks(trace, W, messaging)
+    markers = []
+    model_ready: Dict[int, object] = {w: None for w in range(W)}
+
+    for it in range(iterations):
+        # fwd: not pipelined with distribution (§3.2); starts when the worker
+        # has the full model from the previous iteration's second ring.
+        fwd_done = {}
+        for w in range(W):
+            dep = model_ready[w]
+            fwd_done[w] = _fwd_chain(
+                sim, trace, w, it, lambda l: None,
+                extra_deps=[dep] if dep is not None else [],
+            )
+        # global barrier before backprop (§8.2.1)
+        bar = sim.add(("ringbar", it), deps=list(fwd_done.values()))
+        grads = {w: _bp_chain(sim, trace, w, it, bar) for w in range(W)}
+
+        have = {w: [] for w in range(W)}         # chunk arrival tasks per worker
+        for c, (bits, ready_layer) in enumerate(chunks):
+            if bits <= 0:
+                continue
+            owner = c % W
+            # phase 1: reduce ring; hop k sends from s=(owner+1+k) to s+1
+            prev = None
+            for k in range(W - 1):
+                s = (owner + 1 + k) % W
+                r = (s + 1) % W
+                deps = [grads[s][ready_layer]]
+                if prev is not None:
+                    deps.append(prev)
+                prev = sim.add(
+                    ("r1", it, c, k),
+                    deps=deps,
+                    resources=(E.egress(E.worker(s)), E.ingress(E.worker(r))),
+                    duration=bits / bw,
+                )
+            reduced = prev if prev is not None else grads[owner][ready_layer]
+            have[owner].append(reduced)
+            # phase 2: distribute
+            if multicast_phase2:
+                t = sim.add(
+                    ("r2mc", it, c),
+                    deps=[reduced],
+                    resources=(E.egress(E.worker(owner)),)
+                    + tuple(E.ingress(E.worker(w)) for w in range(W) if w != owner),
+                    duration=bits / bw,
+                )
+                for w in range(W):
+                    if w != owner:
+                        have[w].append(t)
+            else:
+                prev2 = reduced
+                for k in range(W - 1):
+                    s = (owner + k) % W
+                    r = (s + 1) % W
+                    prev2 = sim.add(
+                        ("r2", it, c, k),
+                        deps=[prev2],
+                        resources=(E.egress(E.worker(s)), E.ingress(E.worker(r))),
+                        duration=bits / bw,
+                    )
+                    have[r].append(prev2)
+
+        for w in range(W):
+            model_ready[w] = sim.add(("model", it, w), deps=have[w])
+        markers.append(sim.add(("ringdone", it), deps=list(model_ready.values())))
+
+    makespan = sim.run()
+    marks = [sim.end_time[m] for m in markers]
+    return SimResult(marks, makespan, sim, dict(mechanism="ring", W=W, bw=bw))
+
+
+# ---------------------------------------------------------------------------
+# butterfly mixing
+# ---------------------------------------------------------------------------
+def simulate_butterfly(
+    trace: ModelTrace,
+    workers: int = 32,
+    bandwidth: float = 25e9,
+    iterations: int = 3,
+) -> SimResult:
+    W, bw = workers, bandwidth
+    assert W & (W - 1) == 0, "butterfly needs power-of-two workers"
+    L = int(math.log2(W))
+    sim = E.Sim()
+    n = len(trace.layers)
+    markers = []
+    model_ready: Dict[int, object] = {w: None for w in range(W)}
+
+    for it in range(iterations):
+        fwd_done = {}
+        for w in range(W):
+            dep = model_ready[w]
+            fwd_done[w] = _fwd_chain(
+                sim, trace, w, it, lambda l: None,
+                extra_deps=[dep] if dep is not None else [],
+            )
+        bar = sim.add(("bfbar", it), deps=list(fwd_done.values()))
+        grads = {w: _bp_chain(sim, trace, w, it, bar) for w in range(W)}
+
+        # bf(l, s, w): w's send of param l at stage s to partner w^2^s
+        for l in range(n - 1, -1, -1):
+            bits = trace.layers[l].size_bits
+            for s in range(L):
+                for w in range(W):
+                    partner = w ^ (1 << s)
+                    if s == 0:
+                        deps = [grads[w][l]]
+                    else:
+                        q = w ^ (1 << (s - 1))
+                        deps = [("bf", it, l, s - 1, w), ("bf", it, l, s - 1, q)]
+                    sim.add(
+                        ("bf", it, l, s, w),
+                        deps=deps,
+                        resources=(E.egress(E.worker(w)), E.ingress(E.worker(partner))),
+                        duration=bits / bw,
+                    )
+        for w in range(W):
+            q = w ^ (1 << (L - 1))
+            model_ready[w] = sim.add(
+                ("model", it, w),
+                deps=[("bf", it, l, L - 1, q) for l in range(n)],
+            )
+        markers.append(sim.add(("bfdone", it), deps=list(model_ready.values())))
+
+    makespan = sim.run()
+    marks = [sim.end_time[m] for m in markers]
+    return SimResult(marks, makespan, sim, dict(mechanism="butterfly", W=W, bw=bw))
+
+
+# ---------------------------------------------------------------------------
+# front door
+# ---------------------------------------------------------------------------
+MECHANISMS = (
+    "baseline",            # PS, no network support
+    "agg",                 # PS + in-network aggregation
+    "multicast",           # PS + multicast
+    "multicast+agg",       # PS + both
+    "ring",                # ring-reduce with messaging
+    "ring_nomsg",          # ring-reduce, one ring per parameter
+    "ring+multicast",      # multicast second ring
+    "butterfly",
+)
+
+
+def simulate(mechanism: str, trace: ModelTrace, workers: int = 32,
+             bandwidth: float = 25e9, **kw) -> SimResult:
+    if mechanism == "baseline":
+        return simulate_ps(trace, workers, bandwidth, **kw)
+    if mechanism == "agg":
+        return simulate_ps(trace, workers, bandwidth, in_network_agg=True, **kw)
+    if mechanism == "multicast":
+        return simulate_ps(trace, workers, bandwidth, multicast=True, **kw)
+    if mechanism == "multicast+agg":
+        return simulate_ps(trace, workers, bandwidth, multicast=True,
+                           in_network_agg=True, **kw)
+    if mechanism == "ring":
+        return simulate_ring(trace, workers, bandwidth, messaging=True, **kw)
+    if mechanism == "ring_nomsg":
+        return simulate_ring(trace, workers, bandwidth, messaging=False, **kw)
+    if mechanism == "ring+multicast":
+        return simulate_ring(trace, workers, bandwidth, messaging=True,
+                             multicast_phase2=True, **kw)
+    if mechanism == "butterfly":
+        return simulate_butterfly(trace, workers, bandwidth, **kw)
+    raise ValueError(mechanism)
+
+
+def speedup_table(trace: ModelTrace, mechanisms: Sequence[str],
+                  workers: int = 32, bandwidth: float = 25e9, **kw):
+    """Speedups relative to the no-network-support PS baseline (Tables 4/6)."""
+    base = simulate("baseline", trace, workers, bandwidth, **kw).iteration_time
+    out = {"baseline_s": base}
+    for m in mechanisms:
+        t = simulate(m, trace, workers, bandwidth, **kw).iteration_time
+        out[m] = base / t
+    return out

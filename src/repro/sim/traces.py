@@ -1,0 +1,187 @@
+"""Trace schema + the paper's four CNN subjects + JAX-derived traces.
+
+A trace is network-agnostic (§5): per-parameter sizes and *relative* compute
+times only.  The paper generated traces by instrumenting TensorFlow 1.4 send
+ops; we reconstruct the four CNN traces from the paper's own aggregate tables
+(Tables 2, 3, 7) and provide ``trace_from_cost_analysis`` to derive traces
+for any of this framework's 10 architectures from the compiled step's cost
+analysis — the modern analogue of the paper's collection pipeline.
+
+Conventions: ``layers[0]`` is the FIRST layer of the network.  Backprop
+visits layers in reverse; the paper's "first layer of backpropagation" extra
+compute (Table 3 note) is ``bp_first_extra`` and attaches to the *last*
+layer's gradient.  Sizes are bits on the wire; times are seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerTrace:
+    name: str
+    size_bits: float
+    fwd_time: float
+    bp_time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelTrace:
+    name: str
+    layers: List[LayerTrace]
+    bp_first_extra: float              # compute of the first backprop layer
+    jitter: float = 0.02               # per-worker compute variation (fraction)
+
+    @property
+    def total_bits(self) -> float:
+        return sum(l.size_bits for l in self.layers)
+
+    @property
+    def fwd_total(self) -> float:
+        return sum(l.fwd_time for l in self.layers)
+
+    @property
+    def bp_total(self) -> float:
+        return self.bp_first_extra + sum(l.bp_time for l in self.layers)
+
+    def worker_scale(self, w: int) -> float:
+        """Deterministic per-worker compute multiplier (natural staggering §4)."""
+        if self.jitter == 0:
+            return 1.0
+        # low-discrepancy deterministic sequence in [-1, 1]
+        u = ((w * 2654435761) % 1000) / 999.0 * 2 - 1
+        return 1.0 + self.jitter * u
+
+    def scaled(self, compute_factor: float = 1.0, name: str = "") -> "ModelTrace":
+        """§8.6 'faster GPU': divide all compute times by ``compute_factor``."""
+        layers = [
+            LayerTrace(l.name, l.size_bits, l.fwd_time / compute_factor,
+                       l.bp_time / compute_factor)
+            for l in self.layers
+        ]
+        return dataclasses.replace(
+            self, name=name or f"{self.name}-x{compute_factor}", layers=layers,
+            bp_first_extra=self.bp_first_extra / compute_factor,
+        )
+
+    def with_synthetic_modules(self, kind: str, count: int) -> "ModelTrace":
+        """§8.5 synthetic future models: insert modules before the last layer.
+
+        ``compute`` modules mimic the 35x35x288 Inception block (expensive
+        compute, modest weights); ``network`` modules mimic 17x17x768
+        (heavier weights, cheap compute).
+        """
+        if kind == "compute":
+            mod = LayerTrace("syn_c", 0.004e9, 0.004, 0.016)
+        elif kind == "network":
+            mod = LayerTrace("syn_n", 0.020e9, 0.002, 0.002)
+        else:
+            raise ValueError(kind)
+        layers = list(self.layers)
+        insert_at = max(len(layers) - 1, 0)
+        for i in range(count):
+            layers.insert(insert_at, dataclasses.replace(mod, name=f"{mod.name}{i}"))
+        return dataclasses.replace(
+            self, name=f"{self.name}+{count}{kind}", layers=layers
+        )
+
+
+def _spread(total: float, weights: Sequence[float]) -> List[float]:
+    w = np.asarray(weights, float)
+    w = w / w.sum()
+    return list(total * w)
+
+
+def _build(name, n_layers, total_bits, last_frac, fwd_total, bp_total,
+           bp_first_extra, size_profile="rising", jitter=0.02) -> ModelTrace:
+    """Synthesize a per-layer trace matching the paper's aggregates."""
+    n = n_layers
+    rest_bits = total_bits * (1 - last_frac)
+    if size_profile == "rising":        # conv nets grow channels with depth
+        weights = [1.0 + 3.0 * i / max(n - 2, 1) for i in range(n - 1)]
+    else:                               # "even"
+        weights = [1.0] * (n - 1)
+    sizes = _spread(rest_bits, weights) + [total_bits * last_frac]
+    # fwd cost roughly tracks compute-heavy early/middle layers
+    fwd = _spread(fwd_total, [1.0] * n)
+    bp = _spread(bp_total, [1.0] * n)
+    layers = [
+        LayerTrace(f"{name}/L{i}", sizes[i], fwd[i], bp[i]) for i in range(n)
+    ]
+    return ModelTrace(name, layers, bp_first_extra, jitter)
+
+
+# ----------------------------------------------------------------------------
+# The paper's four CNNs (Tables 2-3).  Notes:
+#  * total size in Gb (gigabits) straight from Table 2;
+#  * bp_net(25Gbps) in Table 3 equals size/25Gbps, confirming sizes are wire
+#    bits;
+#  * VGG16's fused FC parameter is 5.44 Gb of 6.58 Gb (Table 7 discussion) and
+#    its backprop compute is dominated by that first backprop layer;
+#  * Inception-v3 also carries a disproportionate final parameter (§8.2.1)
+#    but its backprop stays compute-bound afterwards (compute:net 10.6).
+# ----------------------------------------------------------------------------
+INCEPTION_V3 = _build(
+    "inception-v3", n_layers=21, total_bits=0.715e9, last_frac=0.30,
+    fwd_total=0.176, bp_total=0.296, bp_first_extra=0.05,
+)
+VGG16 = _build(
+    "vgg16", n_layers=22, total_bits=6.58e9, last_frac=5.44 / 6.58,
+    fwd_total=0.169, bp_total=0.024, bp_first_extra=0.20,
+)
+RESNET_101 = _build(
+    "resnet-101", n_layers=103, total_bits=1.42e9, last_frac=0.03,
+    fwd_total=0.176, bp_total=0.180, bp_first_extra=0.02, size_profile="even",
+)
+RESNET_200 = _build(
+    "resnet-200", n_layers=202, total_bits=2.06e9, last_frac=0.02,
+    fwd_total=0.357, bp_total=0.340, bp_first_extra=0.04, size_profile="even",
+)
+
+PAPER_CNNS = {
+    t.name: t for t in (INCEPTION_V3, VGG16, RESNET_101, RESNET_200)
+}
+
+
+# ----------------------------------------------------------------------------
+# toy model of §8.1.1 / Fig 2: 3 ops, 3 s compute + 3 s network each.
+# With 2 workers and 1 PS: baseline aggregation 21 s; in-network agg 12 s.
+# ----------------------------------------------------------------------------
+def toy_3op(compute=3.0, net_seconds=3.0, bw_bps=1e9) -> ModelTrace:
+    bits = net_seconds * bw_bps
+    layers = [LayerTrace(f"op{i}", bits, 0.0, compute) for i in range(3)]
+    return ModelTrace("toy3", layers, bp_first_extra=0.0, jitter=0.0)
+
+
+# ----------------------------------------------------------------------------
+# modern trace source: derive a ModelTrace from this framework's own models.
+# ----------------------------------------------------------------------------
+def trace_from_cost_analysis(
+    name: str,
+    layer_param_counts: Sequence[int],
+    layer_flops: Sequence[float],
+    chip_flops_per_s: float = 197e12,
+    wire_dtype_bits: int = 16,
+    fwd_bp_ratio: float = 2.0,
+    jitter: float = 0.02,
+) -> ModelTrace:
+    """Build a trace for an LM architecture from per-layer params/FLOPs.
+
+    ``layer_flops`` are forward FLOPs; backprop compute is ``fwd_bp_ratio``x.
+    This is the paper's trace-collection step re-seeded from compiled-model
+    cost analysis (DESIGN.md §3).
+    """
+    layers = []
+    for i, (pc, fl) in enumerate(zip(layer_param_counts, layer_flops)):
+        layers.append(
+            LayerTrace(
+                f"{name}/L{i}",
+                size_bits=pc * wire_dtype_bits,
+                fwd_time=fl / chip_flops_per_s,
+                bp_time=fwd_bp_ratio * fl / chip_flops_per_s,
+            )
+        )
+    return ModelTrace(name, layers, bp_first_extra=0.0, jitter=jitter)

@@ -1,0 +1,3 @@
+from repro.train.trainer import TrainConfig, Trainer, make_mesh
+
+__all__ = ["TrainConfig", "Trainer", "make_mesh"]

@@ -1,0 +1,163 @@
+"""Checkpointing: atomic, keep-k, async, elastic-reshard on restore.
+
+Format: one directory per step (``step_000123/``) containing a single
+uncompressed ``arrays.npz`` (leaves keyed by pytree path) plus
+``manifest.json`` (step, leaf index, framework metadata).  Writes land in a
+``.tmp-*`` sibling and are ``os.replace``d into place, so a preempted writer
+never leaves a half-readable checkpoint; ``latest_step`` only believes
+directories whose manifest exists.
+
+Restore takes the *target* shardings (from the current mesh's ShardingPlan),
+so a checkpoint taken on a 16x16 mesh restores onto 2x16x16, 8x1, or a single
+CPU device unchanged — that is the elastic-rescale path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _step_dir(base: str, step: int) -> str:
+    return os.path.join(base, f"step_{step:09d}")
+
+
+def _paths_of(tree: PyTree) -> List[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(kp) for kp, _ in flat]
+
+
+def save_checkpoint(
+    base: str,
+    step: int,
+    tree: PyTree,
+    *,
+    keep: int = 3,
+    background: bool = False,
+    extra_meta: Optional[Dict] = None,
+) -> Optional[threading.Thread]:
+    """Snapshot ``tree`` (device arrays ok) at ``step``.
+
+    With ``background=True``, the device->host copy happens synchronously (so
+    training can mutate donated buffers) and the file write runs in a thread.
+    """
+    os.makedirs(base, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    host = {}
+    dtypes = {}
+    for kp, x in flat:
+        key = jax.tree_util.keystr(kp)
+        arr = np.asarray(jax.device_get(x))
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+            arr = arr.view(np.uint16)   # npz can't round-trip ml_dtypes
+        host[key] = arr
+    meta = {
+        "step": int(step),
+        "leaves": list(host.keys()),
+        "dtypes": dtypes,
+        "framework": "repro",
+        **(extra_meta or {}),
+    }
+
+    def write():
+        tmp = tempfile.mkdtemp(prefix=".tmp-ckpt-", dir=base)
+        try:
+            np.savez(os.path.join(tmp, _ARRAYS), **{k: v for k, v in host.items()})
+            with open(os.path.join(tmp, _MANIFEST), "w") as f:
+                json.dump(meta, f)
+            final = _step_dir(base, step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        _prune(base, keep)
+
+    if background:
+        t = threading.Thread(target=write, daemon=False)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _prune(base: str, keep: int) -> None:
+    steps = all_steps(base)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(_step_dir(base, s), ignore_errors=True)
+
+
+def all_steps(base: str) -> List[int]:
+    if not os.path.isdir(base):
+        return []
+    out = []
+    for d in os.listdir(base):
+        m = _STEP_RE.match(d)
+        if m and os.path.exists(os.path.join(base, d, _MANIFEST)):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(base: str) -> Optional[int]:
+    steps = all_steps(base)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    base: str,
+    step: int,
+    like: PyTree,
+    shardings: Optional[PyTree] = None,
+) -> PyTree:
+    """Load ``step`` into the structure of ``like``; place per ``shardings``.
+
+    Resharding is implicit: ``jax.device_put(host_array, target_sharding)``
+    lays the full array out on whatever mesh the current job runs — the
+    checkpoint is mesh-agnostic (elastic restart / pod-count change).
+    """
+    import ml_dtypes
+
+    d = _step_dir(base, step)
+    with open(os.path.join(d, _MANIFEST)) as f:
+        meta = json.load(f)
+    dtypes = meta.get("dtypes", {})
+    with np.load(os.path.join(d, _ARRAYS)) as z:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        shard_flat = (
+            jax.tree.leaves(
+                shardings,
+                is_leaf=lambda x: isinstance(x, jax.sharding.Sharding),
+            )
+            if shardings is not None
+            else [None] * len(flat)
+        )
+        leaves = []
+        for (kp, ref), sh in zip(flat, shard_flat):
+            key = jax.tree_util.keystr(kp)
+            arr = z[key]
+            if dtypes.get(key) == "bfloat16":
+                arr = arr.view(ml_dtypes.bfloat16)
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"checkpoint/model shape mismatch at {key}: "
+                    f"{arr.shape} vs {ref.shape}"
+                )
+            if str(arr.dtype) != str(ref.dtype):
+                arr = arr.astype(ref.dtype)
+            leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

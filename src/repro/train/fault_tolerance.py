@@ -1,0 +1,81 @@
+"""Fault-tolerance utilities: preemption handling, straggler watchdog, retry.
+
+On a real pod-scale deployment these hook the cluster scheduler:
+
+* ``PreemptionGuard`` — SIGTERM/SIGINT (the TPU maintenance-event signal on
+  Cloud) flips a flag; the training loop checkpoints and exits cleanly at the
+  next step boundary instead of dying mid-write.
+* ``StepWatchdog`` — tracks per-step wall time; a step slower than
+  ``factor``x the trailing median marks a *straggler event* (on hardware this
+  is how you catch a flaky HBM/host — the mitigation callback would trigger
+  a hot-spare swap / job reshape; here it feeds metrics + tests).
+* ``retry_step`` — bounded retries around transient step failures (e.g. a
+  DCN collective timeout surfacing as an XLA error) before escalating.
+"""
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from typing import Callable, List, Optional
+
+
+class PreemptionGuard:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.requested = False
+        self._prev = {}
+        self._signals = signals
+
+    def __enter__(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def __exit__(self, *exc):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        return False
+
+
+class StepWatchdog:
+    def __init__(self, factor: float = 3.0, window: int = 32,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.factor = factor
+        self.window = window
+        self.on_straggler = on_straggler
+        self.history: List[float] = []
+        self.straggler_steps: List[int] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is flagged as a straggler."""
+        flagged = False
+        if len(self.history) >= 8:
+            med = statistics.median(self.history[-self.window:])
+            if dt > self.factor * med:
+                flagged = True
+                self.straggler_steps.append(step)
+                if self.on_straggler:
+                    self.on_straggler(step, dt, med)
+        self.history.append(dt)
+        return flagged
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.history) if self.history else 0.0
+
+
+def retry_step(fn: Callable, *args, retries: int = 2, backoff: float = 0.5):
+    """Run ``fn(*args)``, retrying transient failures."""
+    last = None
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args)
+        except (RuntimeError, OSError) as e:           # XLA/collective errors
+            last = e
+            if attempt == retries:
+                raise
+            time.sleep(backoff * (2 ** attempt))
+    raise last  # unreachable

@@ -1,0 +1,153 @@
+"""Train-step factories: GSPMD-native and explicit-strategy (paper) modes.
+
+``make_train_step``      — pjit end-to-end; XLA inserts the gradient
+                           collectives (reduce-scatter/all-reduce over data,
+                           all-to-all for MoE).  This is the TPU baseline —
+                           the fabric's "in-network aggregation".
+``make_explicit_train_step`` — per-shard gradients via ``shard_map`` over the
+                           data/pod axes, then one of the paper's mechanisms
+                           (ring / butterfly / PS / hierarchical /
+                           compressed) from ``repro.core`` synchronises them.
+                           This is how the paper's subject is a first-class
+                           runtime feature rather than a simulator-only idea.
+
+Both support microbatch gradient accumulation: batches arrive with a leading
+``(accum, micro, ...)`` layout (see data pipeline / input_specs) and the step
+scans over the accum dim, accumulating fp32 grads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.api import GradSync, GradSyncConfig
+from repro.models import model as M
+from repro.optim import OptConfig, apply_updates
+
+PyTree = Any
+
+
+def _loss_fn(cfg: ModelConfig, use_flash: bool):
+    def loss(params, batch):
+        l, metrics = M.loss_fn(params, batch, cfg, use_flash=use_flash)
+        return l, metrics
+
+    return loss
+
+
+def _grads_of(cfg: ModelConfig, use_flash: bool, grad_accum: int):
+    """Returns fn(params, batch) -> (grads, metrics).
+
+    Gradient dtype: fp32 by default; bf16 when the ``bf16_grad_accum`` perf
+    flag is set (halves gradient-sync wire bytes; the fp32 master weights in
+    the optimizer keep update math exact).
+    """
+    from repro.models.perf import FLAGS
+
+    loss = _loss_fn(cfg, use_flash)
+    vg = jax.value_and_grad(loss, has_aux=True)
+    accum_dtype = jnp.bfloat16 if FLAGS["bf16_grad_accum"] else jnp.float32
+
+    if grad_accum <= 1:
+        def fn(params, batch):
+            (_, metrics), grads = vg(params, batch)
+            return jax.tree.map(lambda g: g.astype(accum_dtype), grads), metrics
+        return fn
+
+    def fn(params, batch):
+        def micro(carry, mb):
+            acc, _ = carry
+            (_, metrics), grads = vg(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(accum_dtype) / grad_accum, acc, grads
+            )
+            return (acc, metrics), None
+
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, accum_dtype), params)
+        metrics0_shape = jax.eval_shape(
+            lambda p, b: vg(p, b)[0][1], params, jax.tree.map(lambda x: x[0], batch)
+        )
+        metrics0 = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), metrics0_shape)
+        (grads, metrics), _ = jax.lax.scan(micro, (zeros, metrics0), batch)
+        return grads, metrics
+
+    return fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptConfig,
+    *,
+    grad_accum: int = 1,
+    use_flash: bool = False,
+    grad_shardings: Optional[PyTree] = None,
+) -> Callable:
+    """GSPMD-native step (jit with shardings applied by the caller).
+
+    ``grad_shardings``: when set (perf flag ``grad_zero1``), gradients are
+    constrained to the zero-1 data-sharded layout, turning the gradient sync
+    into a reduce-scatter that matches the sharded optimizer state.
+    """
+    grads_of = _grads_of(cfg, use_flash, grad_accum)
+
+    def step(params, opt_state, batch):
+        grads, metrics = grads_of(params, batch)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        params, opt_state, om = apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return step
+
+
+def make_explicit_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptConfig,
+    mesh,
+    sync_cfg: GradSyncConfig,
+    params_shape: PyTree,
+    *,
+    grad_accum: int = 1,
+    use_flash: bool = False,
+) -> Tuple[Callable, GradSync]:
+    """Paper-strategy step: per-shard grads -> explicit collective -> update.
+
+    Params replicated over the sync axes (pure DP + optional pod axis);
+    model-parallel sharding composes only with the gspmd step.
+    """
+    grads_of = _grads_of(cfg, use_flash, grad_accum)
+    sync = GradSync(sync_cfg, params_shape)
+    axes = (sync_cfg.axis_name,) + ((sync_cfg.pod_axis,) if sync_cfg.pod_axis else ())
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def per_shard(params, batch):
+        grads, metrics = grads_of(params, batch)
+        # strategy averages over the sync axes
+        reduced, _ = sync(grads, axis_sizes)
+        metrics = jax.tree.map(
+            lambda x: jax.lax.pmean(x, axes[0]) if x.ndim == 0 else x, metrics
+        )
+        return reduced, metrics
+
+    batch_spec = P(axes if grad_accum <= 1 else None)
+    micro_spec = P(*(((None,) + (axes,)) if grad_accum > 1 else (axes,)))
+
+    smap = jax.shard_map(
+        per_shard,
+        mesh=mesh,
+        in_specs=(P(), micro_spec),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    def step(params, opt_state, batch):
+        grads, metrics = smap(params, batch)
+        params, opt_state, om = apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    return step, sync

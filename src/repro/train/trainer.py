@@ -1,0 +1,239 @@
+"""Training loop: mesh + shardings + steps + checkpoints + fault tolerance."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shape, reduced
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.api import GradSyncConfig
+from repro.data import DataConfig, make_pipeline
+from repro.models import model as M
+from repro.optim import OptConfig, init_opt_state
+from repro.launch.shardings import ShardingPlan
+from repro.train import checkpoint as ckpt
+from repro.train import steps as steps_lib
+from repro.train.fault_tolerance import PreemptionGuard, StepWatchdog, retry_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    arch: str = "qwen1.5-0.5b"
+    shape: str = "train_4k"
+    smoke: bool = True                  # reduced config + tiny shape (CPU)
+    steps: int = 20
+    mesh_shape: tuple = ()              # () => all local devices on 'data'
+    strategy: str = "gspmd"             # gspmd | ring | butterfly | ps | ...
+    compression: str = ""               # "" | int8 | topk
+    grad_accum: int = 1
+    use_flash: bool = False
+    seed: int = 0
+    ckpt_dir: str = ""
+    ckpt_every: int = 0
+    keep_ckpts: int = 3
+    log_every: int = 10
+    batch_override: int = 0
+    seq_override: int = 0
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+    data: DataConfig = dataclasses.field(default_factory=DataConfig)
+
+
+def make_mesh(shape: tuple) -> Mesh:
+    n = len(jax.devices())
+    if not shape:
+        return jax.make_mesh((n,), ("data",))
+    names = {1: ("data",), 2: ("data", "model"), 3: ("pod", "data", "model")}[len(shape)]
+    return jax.make_mesh(shape, names)
+
+
+class Trainer:
+    def __init__(self, tcfg: TrainConfig):
+        self.tcfg = tcfg
+        mcfg = get_config(tcfg.arch)
+        shape = get_shape(tcfg.shape) if tcfg.shape in (
+            "train_4k", "prefill_32k", "decode_32k", "long_500k"
+        ) else None
+        if tcfg.smoke:
+            mcfg = reduced(mcfg)
+            shape = ShapeConfig("smoke", tcfg.seq_override or 128,
+                                tcfg.batch_override or 8, "train")
+        if tcfg.batch_override or tcfg.seq_override:
+            shape = dataclasses.replace(
+                shape,
+                global_batch=tcfg.batch_override or shape.global_batch,
+                seq_len=tcfg.seq_override or shape.seq_len,
+            )
+        self.mcfg, self.shape = mcfg, shape
+        self.mesh = make_mesh(tcfg.mesh_shape)
+        self.plan = ShardingPlan(mcfg, self.mesh)
+        self.pipeline = make_pipeline(tcfg.data, mcfg, shape)
+        self.watchdog = StepWatchdog()
+        self.step = 0
+        self._build()
+
+    # ------------------------------------------------------------------ build
+    def _build(self):
+        tcfg, mcfg = self.tcfg, self.mcfg
+        params_shape = jax.eval_shape(
+            lambda k: M.init_params(k, mcfg), jax.random.PRNGKey(tcfg.seed)
+        )
+        self.param_sh = self.plan.param_shardings(params_shape)
+        self.opt_sh = self.plan.shardings_for(
+            {
+                "step": P(),
+                "m": self.plan.param_specs(params_shape, zero1=True),
+                "v": self.plan.param_specs(params_shape, zero1=True),
+                "master": self.plan.param_specs(params_shape, zero1=True),
+            }
+        )
+
+        if tcfg.strategy == "gspmd":
+            step_fn = steps_lib.make_train_step(
+                mcfg, tcfg.opt, grad_accum=tcfg.grad_accum, use_flash=tcfg.use_flash
+            )
+        else:
+            step_fn, self.sync = steps_lib.make_explicit_train_step(
+                mcfg, tcfg.opt, self.mesh,
+                GradSyncConfig(
+                    strategy=tcfg.strategy,
+                    compression=tcfg.compression,
+                    pod_axis="pod" if "pod" in self.mesh.axis_names
+                    and dict(zip(self.mesh.axis_names, self.mesh.devices.shape))["pod"] > 1
+                    else "",
+                ),
+                params_shape,
+                grad_accum=tcfg.grad_accum,
+                use_flash=tcfg.use_flash,
+            )
+
+        batch_shape = self._batch_shape()
+        self.batch_sh = self.plan.shardings_for(self._batch_specs(batch_shape))
+        self.step_fn = jax.jit(
+            step_fn,
+            in_shardings=(self.param_sh, self.opt_sh, self.batch_sh),
+            out_shardings=(self.param_sh, self.opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+
+    def _batch_specs(self, batch_shape: PyTree) -> PyTree:
+        axes = self.plan.batch_axes
+        ga = self.tcfg.grad_accum
+
+        def spec(x):
+            if ga > 1:
+                return P(None, axes, *([None] * (x.ndim - 2)))
+            return P(axes, *([None] * (x.ndim - 1)))
+
+        return jax.tree.map(spec, batch_shape)
+
+    def _batch_shape(self) -> PyTree:
+        B, S = self.shape.global_batch, self.shape.seq_len
+        ga = self.tcfg.grad_accum
+        mk = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        if ga > 1:
+            b = {"tokens": mk(ga, B // ga, S), "labels": mk(ga, B // ga, S)}
+            if self.mcfg.is_encoder_decoder:
+                b["frames"] = jax.ShapeDtypeStruct(
+                    (ga, B // ga, S, self.mcfg.d_model), jnp.bfloat16
+                )
+            return b
+        b = {"tokens": mk(B, S), "labels": mk(B, S)}
+        if self.mcfg.is_encoder_decoder:
+            b["frames"] = jax.ShapeDtypeStruct((B, S, self.mcfg.d_model), jnp.bfloat16)
+        return b
+
+    # -------------------------------------------------------------- lifecycle
+    def init_or_restore(self):
+        tcfg = self.tcfg
+        latest = ckpt.latest_step(tcfg.ckpt_dir + "/params") if tcfg.ckpt_dir else None
+        params_shape = jax.eval_shape(
+            lambda k: M.init_params(k, self.mcfg), jax.random.PRNGKey(tcfg.seed)
+        )
+        if latest is not None:
+            like_p = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), params_shape)
+            self.params = ckpt.restore_checkpoint(
+                tcfg.ckpt_dir + "/params", latest, like_p, self.param_sh
+            )
+            opt_like = jax.eval_shape(init_opt_state, params_shape)
+            opt_like = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), opt_like)
+            self.opt_state = ckpt.restore_checkpoint(
+                tcfg.ckpt_dir + "/opt", latest, opt_like, self.opt_sh
+            )
+            self.step = latest
+        else:
+            init = jax.jit(
+                lambda k: M.init_params(k, self.mcfg), out_shardings=self.param_sh
+            )
+            self.params = init(jax.random.PRNGKey(tcfg.seed))
+            self.opt_state = jax.jit(
+                init_opt_state, out_shardings=self.opt_sh
+            )(self.params)
+            self.step = 0
+
+    def save(self, background: bool = False):
+        if not self.tcfg.ckpt_dir:
+            return
+        ckpt.save_checkpoint(
+            self.tcfg.ckpt_dir + "/params", self.step, self.params,
+            keep=self.tcfg.keep_ckpts, background=background,
+        )
+        ckpt.save_checkpoint(
+            self.tcfg.ckpt_dir + "/opt", self.step, self.opt_state,
+            keep=self.tcfg.keep_ckpts, background=background,
+        )
+
+    def _device_batch(self, host_batch: Dict[str, np.ndarray]) -> PyTree:
+        ga = self.tcfg.grad_accum
+        out = {}
+        for k, v in host_batch.items():
+            if ga > 1:
+                v = v.reshape((ga, v.shape[0] // ga) + v.shape[1:])
+            if k == "frames":
+                v = v.astype(jnp.bfloat16)
+            out[k] = jax.device_put(v, self.batch_sh[k])
+        return out
+
+    # ------------------------------------------------------------------- run
+    def run(self, num_steps: Optional[int] = None) -> Dict[str, float]:
+        tcfg = self.tcfg
+        n = num_steps or tcfg.steps
+        history = []
+        with PreemptionGuard() as guard:
+            for _ in range(n):
+                if guard.requested:
+                    self.save()
+                    break
+                host = self.pipeline.batch_at(self.step)
+                batch = self._device_batch(host)
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = retry_step(
+                    self.step_fn, self.params, self.opt_state, batch
+                )
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.watchdog.record(self.step, dt)
+                self.step += 1
+                history.append(loss)
+                if tcfg.log_every and self.step % tcfg.log_every == 0:
+                    print(
+                        f"step {self.step:5d} loss {loss:.4f} "
+                        f"lr {float(metrics['lr']):.2e} "
+                        f"gnorm {float(metrics['grad_norm']):.2f} {dt*1e3:.0f} ms"
+                    )
+                if tcfg.ckpt_every and self.step % tcfg.ckpt_every == 0:
+                    self.save(background=True)
+        self.pipeline.stop()
+        return {
+            "first_loss": history[0] if history else float("nan"),
+            "last_loss": history[-1] if history else float("nan"),
+            "steps": len(history),
+            "median_step_s": self.watchdog.median,
+        }

@@ -1,0 +1,41 @@
+"""Multi-device collective checks run in a subprocess (8 fake CPU devices).
+
+The main pytest process must keep a single device (smoke tests depend on it),
+so the device-count flag lives in the child only.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.core.dist_checks"],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    lines = [l for l in p.stdout.splitlines() if l.startswith("{")]
+    assert lines, f"no JSON from dist_checks: {p.stdout[-2000:]}\n{p.stderr[-2000:]}"
+    return json.loads(lines[-1])
+
+
+CHECKS = [
+    "check_ring", "check_ring_multicast", "check_butterfly",
+    "check_rabenseifner", "check_ps", "check_reduce_scatter",
+    "check_all_gather", "check_hierarchical", "check_int8", "check_topk",
+    "check_gradsync_tree", "check_explicit_strategies_match_gspmd",
+    "check_hierarchical_train_step",
+]
+
+
+@pytest.mark.parametrize("name", CHECKS)
+def test_collective(dist_results, name):
+    assert dist_results.get(name) == "ok", dist_results.get(name)

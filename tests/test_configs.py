@@ -1,0 +1,61 @@
+"""Config registry + analytic param counts vs published sizes."""
+import pytest
+
+from repro.configs import ARCHS, LONG_CONTEXT_ARCHS, all_cells, get_config, reduced
+
+
+def test_ten_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize(
+    "arch,expected,tol",
+    [
+        ("qwen1.5-0.5b", 0.62e9, 0.30),       # HF reports 0.62B total
+        ("starcoder2-3b", 3.0e9, 0.20),
+        ("gemma2-2b", 2.6e9, 0.20),
+        ("llama3-405b", 405e9, 0.05),
+        ("falcon-mamba-7b", 7.3e9, 0.15),
+        # assigned dims (48L x 64e x d_ff 1408) analytically give ~29B total;
+        # the released Moonlight-16B has 27 layers — we implement the
+        # assignment as specified (active params ~4.6B, within a3b spirit)
+        ("moonshot-v1-16b-a3b", 28.9e9, 0.10),
+        ("mixtral-8x7b", 46.7e9, 0.05),
+        ("chameleon-34b", 34e9, 0.10),
+        ("jamba-v0.1-52b", 52e9, 0.10),
+        ("seamless-m4t-large-v2", 2.3e9, 0.35),  # backbone only (frontend stubbed)
+    ],
+)
+def test_param_counts(arch, expected, tol):
+    n = get_config(arch).param_count()
+    assert abs(n - expected) / expected < tol, f"{arch}: {n / 1e9:.2f}B vs {expected / 1e9}B"
+
+
+def test_cell_matrix():
+    cells = all_cells()
+    assert len(cells) == 40
+    skipped = [c for c in cells if not c.runnable]
+    assert {c.arch for c in skipped} == set(ARCHS) - LONG_CONTEXT_ARCHS
+    assert all(c.shape == "long_500k" for c in skipped)
+    assert all(c.skip_reason for c in skipped)
+
+
+def test_reduced_preserves_family_structure():
+    for name, cfg in ARCHS.items():
+        r = reduced(cfg)
+        assert r.family == cfg.family
+        assert (r.moe is None) == (cfg.moe is None)
+        assert (r.ssm is None) == (cfg.ssm is None)
+        assert r.is_encoder_decoder == cfg.is_encoder_decoder
+        assert (r.sliding_window > 0) == (cfg.sliding_window > 0)
+        assert r.param_count() < 5e6
+
+
+def test_interleave_patterns():
+    jamba = get_config("jamba-v0.1-52b")
+    attn_layers = [i for i in range(32) if jamba.is_attn_layer(i)]
+    assert attn_layers == [4, 12, 20, 28]
+    moe_layers = [i for i in range(32) if jamba.is_moe_layer(i)]
+    assert moe_layers == list(range(1, 32, 2))
+    gemma = get_config("gemma2-2b")
+    assert gemma.is_local_layer(0) and not gemma.is_local_layer(1)

@@ -1,0 +1,80 @@
+"""Bucketing / assignment / compression invariants (hypothesis where useful)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bucketing as B
+from repro.core.compression import dequantize_int8, quantize_int8
+
+
+def _leaves(sizes):
+    return [B.Leaf(f"p{i}", (s,), s, jnp.float32) for i, s in enumerate(sizes)]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 10_000), min_size=1, max_size=40),
+    owners=st.integers(1, 8),
+)
+def test_size_balanced_no_worse_than_round_robin(sizes, owners):
+    rr = B.assign_owners(sizes, owners, "round_robin")
+    sb = B.assign_owners(sizes, owners, "size_balanced")
+    _, rr_max, _ = B.imbalance(sizes, rr, owners)
+    _, sb_max, _ = B.imbalance(sizes, sb, owners)
+    assert sb_max <= rr_max + 1e-9
+
+
+def test_imbalance_reproduces_table7_shape():
+    """A VGG-like size profile under round-robin: max% far above ideal."""
+    sizes = [30e6] * 15 + [5440e6]          # 15 convs + giant FC
+    owners = B.assign_owners(sizes, 4, "round_robin")
+    mn, mx, ideal = B.imbalance(sizes, owners, 4)
+    assert mx > 0.85 and ideal == 0.25      # paper Table 7: 0.918 for 4 PS
+    sb = B.assign_owners(sizes, 4, "size_balanced")
+    _, mx2, _ = B.imbalance(sizes, sb, 4)
+    assert mx2 < mx
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 5_000), min_size=1, max_size=20),
+    target=st.integers(1024, 64 * 1024),
+)
+def test_buckets_cover_all_leaves_once(sizes, target):
+    leaves = _leaves(sizes)
+    buckets = B.build_buckets(leaves, target_bytes=target)
+    seen = [i for b in buckets for i in b.leaf_ids]
+    assert sorted(seen) == list(range(len(sizes)))
+
+
+def test_pack_unpack_roundtrip():
+    leaves = _leaves([7, 130, 33])
+    arrs = [jnp.arange(s, dtype=jnp.float32) + i for i, s in enumerate([7, 130, 33])]
+    bucket = B.Bucket((0, 1, 2), sum(x.size * 4 for x in arrs))
+    buf = B.pack(arrs, bucket, align=64)
+    assert buf.size % 64 == 0
+    out = B.unpack(buf, bucket, leaves)
+    for i, a in enumerate(arrs):
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(a))
+
+
+def test_chunk_buckets_respects_message_size():
+    leaves = _leaves([100, 100, 100, 100])
+    buckets = B.build_buckets(leaves, target_bytes=1 << 20)
+    chunked = B.chunk_buckets(buckets, leaves, max_message_bytes=450)
+    assert len(chunked) > len(buckets)
+    for c in chunked:
+        assert len(c.leaf_ids) == 1 or c.bytes <= 450
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(0.01, 100.0))
+def test_int8_quant_bounded_error(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1024,)) * scale
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    blockmax = np.abs(np.asarray(x).reshape(-1, 128)).max(1, keepdims=True)
+    err = np.abs(np.asarray(back) - np.asarray(x)).reshape(-1, 128)
+    assert (err <= blockmax / 127.0 * 0.51 + 1e-9).all()

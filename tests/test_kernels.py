@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as F
+from repro.kernels.flash_attention import ref as FR
+from repro.kernels.int8_quant import kernel as QK
+from repro.kernels.int8_quant.ref import dequantize_ref, quantize_ref
+from repro.kernels.mamba_scan import ops as MS
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+FLASH_CASES = [
+    # (B, S, H, Hk, hd)
+    (2, 256, 4, 2, 64),
+    (1, 128, 8, 8, 128),
+    (2, 384, 6, 2, 80),      # non-128 head dim: exercises padding path
+    (1, 256, 4, 1, 64),      # MQA
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=str)
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 128, 0.0), (True, 0, 30.0),
+    (False, 0, 0.0), (True, 128, 50.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, causal, window, softcap, dtype):
+    B, S, H, Hk, hd = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hk, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hk, hd), dtype)
+    got = F.flash_attention(q, k, v, causal=causal, window=window, softcap=softcap)
+    want = FR.attention_ref(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, window=window, softcap=softcap,
+    ).swapaxes(1, 2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 5e-5
+    err = np.abs(np.asarray(got, np.float32) - np.asarray(want, np.float32)).max()
+    assert err < tol, err
+
+
+def test_flash_attention_gradients_flow():
+    B, S, H, hd = 1, 128, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(F.flash_attention(q, k, v) ** 2)
+
+    def loss_ref(q, k, v):
+        o = FR.attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2))
+        return jnp.sum(o.swapaxes(1, 2) ** 2)
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+MAMBA_CASES = [(2, 128, 256, 16), (1, 64, 512, 8), (2, 192, 256, 16)]
+
+
+@pytest.mark.parametrize("case", MAMBA_CASES, ids=str)
+def test_mamba_scan_matches_ref(case):
+    B, S, D, N = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(ks[0], (B, S, D))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (D, N)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    h0 = jax.random.normal(ks[5], (B, D, N)) * 0.1
+    y, h = MS.selective_scan(x, dt, A, Bm, Cm, h0)
+    yr, hr = selective_scan_ref(x, dt, A, Bm, Cm, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_kernel_matches_model_path():
+    from repro.models.mamba import selective_scan as model_scan
+
+    B, S, D, N = 2, 128, 256, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    x = jax.random.normal(ks[0], (B, S, D))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (D, N)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    h0 = jnp.zeros((B, D, N))
+    yk, _ = MS.selective_scan(x, dt, A, Bm, Cm, h0)
+    ym, _ = model_scan(x, dt, A, Bm, Cm, h0, chunk=64)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(ym), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [128 * 8, 128 * 100, 128 * 33])
+def test_int8_kernels_match_ref(n):
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    q, s = QK.quantize_pallas(x)
+    qr, sr = quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    d = QK.dequantize_pallas(q, s)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dequantize_ref(qr, sr)),
+                               rtol=1e-6)
+
+
+def test_model_attention_flash_path_matches_xla_path():
+    """The model-level use_flash flag must not change results."""
+    import dataclasses
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import init_params
+    from repro.models.attention import attention
+
+    cfg = dataclasses.replace(reduced(ARCHS["gemma2-2b"]), head_dim=64)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sub = jax.tree.map(lambda x: x[0], params["blocks"])["sub0"]["attn"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, cfg.d_model), jnp.float32)
+    a, _ = attention(sub, x, cfg, local=True, use_flash=False)
+    b, _ = attention(sub, x, cfg, local=True, use_flash=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                               rtol=2e-2, atol=2e-2)

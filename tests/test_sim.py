@@ -1,0 +1,167 @@
+"""Simulator: golden numbers from the paper + structural invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim import (
+    INCEPTION_V3,
+    VGG16,
+    simulate,
+    simulate_ps,
+    toy_3op,
+)
+from repro.sim.strategies import _ring_chunks
+from repro.sim.traces import LayerTrace, ModelTrace
+
+
+# ----------------------------------------------------------- paper §8.1.1 / Fig 2
+def _agg_window(res, W=2, it=0):
+    sim = res.sim
+    bp_start = min(sim.start_time[("bp", it, w, 2)] for w in range(W))
+    return sim.end_time[("barrier", it)] - bp_start
+
+
+def test_toy_baseline_staggered_21s():
+    trace = toy_3op()
+    r = simulate_ps(trace, workers=2, bandwidth=1e9, iterations=1)
+    assert _agg_window(r) == pytest.approx(21.0)
+
+
+def test_toy_agg_staggered_28pct():
+    trace = toy_3op()
+    r = simulate_ps(trace, workers=2, bandwidth=1e9, iterations=1, in_network_agg=True)
+    w = _agg_window(r)
+    assert w == pytest.approx(15.0)
+    assert (21 - w) / 21 == pytest.approx(0.2857, abs=1e-3)
+
+
+def test_toy_agg_simultaneous_43pct():
+    trace = toy_3op()
+    r = simulate_ps(trace, workers=2, bandwidth=1e9, iterations=1,
+                    multicast=True, in_network_agg=True)
+    assert _agg_window(r) == pytest.approx(12.0)
+
+
+# ------------------------------------------------------------------ rankings
+@pytest.mark.parametrize("trace", [INCEPTION_V3, VGG16], ids=lambda t: t.name)
+def test_mc_agg_beats_parts(trace):
+    """Table 4: multicast+agg beats either mechanism alone; both beat baseline
+    (the mc-vs-agg gap grows with worker count; at W=8 it can be a tie)."""
+    kw = dict(workers=8, bandwidth=25e9, half_duplex_ps=True)
+    base = simulate("baseline", trace, **kw).iteration_time
+    agg = simulate("agg", trace, **kw).iteration_time
+    mc = simulate("multicast", trace, **kw).iteration_time
+    both = simulate("multicast+agg", trace, **kw).iteration_time
+    assert both < min(mc, agg) * 1.02
+    # at W=8 a compute-bound model (inception) can tie agg with baseline
+    assert max(mc, agg) <= base * 1.001
+
+
+def test_ring_beats_butterfly_for_network_bound_model():
+    """§8.2.3: ring > butterfly for VGG16 (network-bound backprop)."""
+    ring = simulate("ring", VGG16, workers=8, bandwidth=25e9).iteration_time
+    bf = simulate("butterfly", VGG16, workers=8, bandwidth=25e9).iteration_time
+    assert ring < bf
+
+
+def test_ring_multicast_equivalent_to_ring():
+    """§8.4: multicast in the second ring has very limited impact."""
+    ring = simulate("ring", INCEPTION_V3, workers=8, bandwidth=25e9).iteration_time
+    rmc = simulate("ring+multicast", INCEPTION_V3, workers=8,
+                   bandwidth=25e9).iteration_time
+    assert abs(ring - rmc) / ring < 0.10
+
+
+def test_messaging_helps_vgg():
+    """§8.2.1/§9.2: parameter messaging rescues ring from the 5.44Gb layer."""
+    msg = simulate("ring", VGG16, workers=8, bandwidth=10e9).iteration_time
+    nomsg = simulate("ring_nomsg", VGG16, workers=8, bandwidth=10e9).iteration_time
+    assert msg < nomsg
+
+
+def test_end_host_competitive_with_fabric():
+    """Headline claim (as reproducible with synthesized traces): ring is the
+    best end-host mechanism and lands within ~35% of multicast+agg without
+    touching the fabric.  (The paper has ring ahead by ~12% for VGG16; our
+    per-layer trace synthesis from the aggregate tables flips that tail —
+    deviation documented in EXPERIMENTS.md §Paper-validation.)"""
+    kw = dict(workers=8, bandwidth=25e9)
+    ring = simulate("ring", VGG16, **kw).iteration_time
+    bf = simulate("butterfly", VGG16, **kw).iteration_time
+    both = simulate("multicast+agg", VGG16, half_duplex_ps=True, **kw).iteration_time
+    assert ring <= bf
+    assert ring <= both * 1.35
+
+
+# ---------------------------------------------------------------- §9 robustness
+def test_no_barrier_helps_ps():
+    kw = dict(workers=8, bandwidth=25e9, multicast=True, in_network_agg=True)
+    with_b = simulate_ps(INCEPTION_V3, barrier=True, iterations=4, **kw).iteration_time
+    no_b = simulate_ps(INCEPTION_V3, barrier=False, iterations=4, **kw).iteration_time
+    assert no_b <= with_b * 1.02
+
+
+def test_block_distribution_competitive_with_agg():
+    """Table 10: block distribution ~ in-network aggregation."""
+    blk = simulate_ps(VGG16, workers=8, bandwidth=10e9,
+                      distribution="block").iteration_time
+    agg = simulate_ps(VGG16, workers=8, bandwidth=10e9,
+                      in_network_agg=True).iteration_time
+    assert blk < agg * 1.35
+
+
+def test_split_assignment_beats_round_robin_for_vgg():
+    """Table 8: splitting the 5.44Gb FC across PSs helps VGG16."""
+    rr = simulate_ps(VGG16, workers=8, num_ps=4, bandwidth=25e9,
+                     assignment="round_robin").iteration_time
+    sp = simulate_ps(VGG16, workers=8, num_ps=4, bandwidth=25e9,
+                     assignment="split").iteration_time
+    assert sp < rr
+
+
+# ------------------------------------------------------------------- properties
+@settings(max_examples=20, deadline=None)
+@given(
+    bw=st.sampled_from([5e9, 10e9, 25e9, 100e9]),
+    mech=st.sampled_from(["baseline", "multicast", "ring", "butterfly"]),
+)
+def test_more_bandwidth_never_slower(bw, mech):
+    t1 = simulate(mech, INCEPTION_V3, workers=4, bandwidth=bw).iteration_time
+    t2 = simulate(mech, INCEPTION_V3, workers=4, bandwidth=bw * 2).iteration_time
+    assert t2 <= t1 * 1.001
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 12),
+    w=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 100),
+)
+def test_ring_chunks_partition_total(n, w, seed):
+    import random
+
+    rnd = random.Random(seed)
+    layers = [LayerTrace(f"l{i}", rnd.uniform(1e6, 1e9), 0.01, 0.01)
+              for i in range(n)]
+    tr = ModelTrace("t", layers, 0.0, jitter=0.0)
+    chunks = _ring_chunks(tr, w, messaging=True)
+    assert len(chunks) == w
+    assert sum(c[0] for c in chunks) == pytest.approx(tr.total_bits, rel=1e-6)
+    assert all(0 <= c[1] < n for c in chunks)
+
+
+def test_compute_speedup_crossover():
+    """§8.6: with much faster compute, PS+mc+agg catches ring (Figs 11-12)."""
+    kw = dict(workers=8, bandwidth=25e9)
+    gap = []
+    for f in (1.0, 4.0):
+        tr = INCEPTION_V3.scaled(compute_factor=f)
+        ring = simulate("ring", tr, **kw).iteration_time
+        both = simulate("multicast+agg", tr, **kw).iteration_time
+        gap.append(both / ring)
+    assert gap[1] < gap[0]  # fabric support gains ground as compute shrinks
+
+
+def test_synthetic_modules_change_totals():
+    tr = INCEPTION_V3.with_synthetic_modules("network", 10)
+    assert len(tr.layers) == len(INCEPTION_V3.layers) + 10
+    assert tr.total_bits > INCEPTION_V3.total_bits

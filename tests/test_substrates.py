@@ -1,0 +1,191 @@
+"""Optimizer, data pipeline, checkpointing, fault tolerance, serving."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, make_pipeline
+from repro.configs import ARCHS, get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.optim import OptConfig, apply_updates, init_opt_state, lr_at
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import StepWatchdog, retry_step
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_minimises_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array([2.0])}
+    cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=200, weight_decay=0.0,
+                    clip_norm=0)
+    state = init_opt_state(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(1e-4, rel=0.05)
+
+
+def test_grad_clipping_caps_update_norm():
+    params = {"w": jnp.zeros((4,))}
+    cfg = OptConfig(lr=1.0, warmup_steps=0, clip_norm=1.0, weight_decay=0.0)
+    state = init_opt_state(params)
+    g = {"w": jnp.full((4,), 1e6)}
+    _, state2, m = apply_updates(params, g, state, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.abs(jax.tree.leaves(state2["m"])[0]).max()) <= 0.11
+
+
+# ----------------------------------------------------------------------- data
+def test_pipeline_deterministic_and_shifted():
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    shape = ShapeConfig("t", 64, 4, "train")
+    p1 = make_pipeline(DataConfig(seed=7), cfg, shape)
+    p2 = make_pipeline(DataConfig(seed=7), cfg, shape)
+    b1, b2 = p1.batch_at(3), p2.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    b3 = p1.batch_at(4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_pipeline_prefetch_thread():
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    p = make_pipeline(DataConfig(seed=1), cfg, ShapeConfig("t", 32, 2, "train"))
+    p.start(first_step=5)
+    step, batch = p.next()
+    assert step == 5 and batch["tokens"].shape == (2, 32)
+    p.stop()
+
+
+def test_memmap_pipeline(tmp_path):
+    toks = (np.arange(100_000) % 1000).astype(np.uint16)
+    f = tmp_path / "tokens.bin"
+    toks.tofile(f)
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    p = make_pipeline(DataConfig(kind="memmap", path=str(f)), cfg,
+                      ShapeConfig("t", 16, 2, "train"))
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (2, 16)
+    assert b["tokens"].max() < cfg.vocab_size
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+        "n": {"b": jnp.ones((4,), jnp.float32), "s": jnp.zeros((), jnp.int32)},
+    }
+    ckpt.save_checkpoint(str(tmp_path), 7, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    out = ckpt.restore_checkpoint(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_k(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in range(5):
+        ckpt.save_checkpoint(str(tmp_path), s, tree, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [3, 4]
+
+
+def test_checkpoint_background_write(tmp_path):
+    tree = {"x": jnp.arange(1000, dtype=jnp.float32)}
+    t = ckpt.save_checkpoint(str(tmp_path), 1, tree, background=True)
+    t.join(5)
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save_checkpoint(str(tmp_path), 0, {"x": jnp.zeros((4,))})
+    with pytest.raises(ValueError, match="mismatch"):
+        ckpt.restore_checkpoint(str(tmp_path), 0, {"x": jnp.zeros((5,))})
+
+
+def test_partial_checkpoint_ignored(tmp_path):
+    ckpt.save_checkpoint(str(tmp_path), 3, {"x": jnp.zeros((2,))})
+    # a torn write: directory without manifest
+    os.makedirs(tmp_path / "step_000000009")
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+# ------------------------------------------------------------ fault tolerance
+def test_watchdog_flags_stragglers():
+    events = []
+    wd = StepWatchdog(factor=3.0, on_straggler=lambda s, dt, med: events.append(s))
+    for i in range(20):
+        wd.record(i, 0.1)
+    assert not wd.record(20, 0.15)
+    assert wd.record(21, 1.0)
+    assert events == [21]
+
+
+def test_retry_step_recovers():
+    calls = []
+
+    def flaky(x):
+        calls.append(x)
+        if len(calls) < 3:
+            raise RuntimeError("transient collective timeout")
+        return x + 1
+
+    assert retry_step(flaky, 41, retries=3, backoff=0.01) == 42
+    assert len(calls) == 3
+
+
+def test_retry_step_exhausts():
+    def always_fails():
+        raise RuntimeError("dead chip")
+
+    with pytest.raises(RuntimeError):
+        retry_step(always_fails, retries=1, backoff=0.01)
+
+
+# --------------------------------------------------------------------- serving
+def test_serving_greedy_matches_manual_decode():
+    import dataclasses
+
+    from repro.models import decode_step, init_params, prefill
+    from repro.serving import Request, ServeConfig, ServingEngine
+
+    cfg = reduced(ARCHS["qwen1.5-0.5b"])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = [5, 9, 2, 14]
+    eng = ServingEngine(cfg, params, ServeConfig(slots=2, max_len=64))
+    req = Request(prompt=list(prompt), max_new=6)
+    eng.run([req])
+
+    # manual greedy decode, same prompt at full batch shape
+    B = 2
+    toks = np.zeros((B, len(prompt)), np.int32)
+    toks[0] = prompt
+    logits, cache = jax.jit(lambda p, b: prefill(p, b, cfg, max_len=64))(
+        params, {"tokens": jnp.asarray(toks)}
+    )
+    out = []
+    cur = np.asarray(logits, np.float32).argmax(-1)
+    for _ in range(6):
+        out.append(int(cur[0]))
+        logits, cache = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))(
+            params, jnp.asarray(cur[:, None].astype(np.int32)), cache
+        )
+        cur = np.asarray(logits, np.float32).argmax(-1)
+    assert req.out == out

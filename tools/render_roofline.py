@@ -1,0 +1,57 @@
+"""Render dry-run artifacts into the EXPERIMENTS.md roofline tables."""
+import json
+import os
+import sys
+
+
+def load(d):
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            out.append(json.load(open(os.path.join(d, f))))
+    return out
+
+
+def table(cells, caption):
+    print(f"\n### {caption}\n")
+    print("| arch | shape | kind | bottleneck | compute (ms) | memory (ms) | "
+          "collective (ms) | step bound (ms) | MFU@bound | useful-FLOPs | "
+          "wire GB/chip | compile (s) |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c.get("skipped"):
+            print(f"| {c['arch']} | {c['shape']} | — | SKIP (sub-quadratic "
+                  f"attention required) | | | | | | | | |")
+            continue
+        r = c["roofline"]
+        print(f"| {c['arch']} | {c['shape']} | {c['kind']} | "
+              f"**{r['bottleneck']}** | {r['compute_s']*1e3:.2f} | "
+              f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+              f"{r['step_lower_bound_s']*1e3:.2f} | {r['mfu_at_bound']:.4f} | "
+              f"{r['useful_flops_ratio']:.3f} | "
+              f"{c['collective_bytes'].get('total',0)/1e9:.2f} | "
+              f"{c['compile_s']:.1f} |")
+
+
+def memtable(cells, caption):
+    print(f"\n### {caption}\n")
+    print("| arch | shape | args (GB/chip) | temps (GB/chip) | out (GB/chip) |")
+    print("|---|---|---|---|---|")
+    for c in cells:
+        if c.get("skipped"):
+            continue
+        m = c["memory_analysis"]
+        print(f"| {c['arch']} | {c['shape']} | "
+              f"{m.get('argument_size_in_bytes',0)/1e9:.2f} | "
+              f"{m.get('temp_size_in_bytes',0)/1e9:.2f} | "
+              f"{m.get('output_size_in_bytes',0)/1e9:.2f} |")
+
+
+if __name__ == "__main__":
+    base = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_v2"
+    table(load(os.path.join(base, "pod16x16")), "Single pod (16x16 = 256 chips)")
+    table(load(os.path.join(base, "pod2x16x16")), "Multi-pod (2x16x16 = 512 chips)")
+    memtable(load(os.path.join(base, "pod16x16")),
+             "memory_analysis per chip (single pod)")
